@@ -1,0 +1,50 @@
+"""Shared benchmark machinery.
+
+CPU-container methodology (DESIGN.md §8): the paper's absolute GPU numbers
+can't be reproduced here; what is validated is the *claims structure* —
+which system wins where, how execution time grows, where build time
+dominates — using wall-clock of compiled JAX on scaled dataset sizes. Every
+benchmark prints ``name,case,seconds,derived`` CSV rows and returns them.
+
+Timing: one warmup call (compile + engine build), then ``repeats`` timed
+runs, median reported. Engine *build* time is timed separately where the
+figure calls for it (paper §V-D).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(_leaves(fn()))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(_leaves(fn()))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _leaves(x):
+    return [l for l in jax.tree.leaves(x) if hasattr(l, "block_until_ready")]
+
+
+class Reporter:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[str] = []
+
+    def row(self, case: str, seconds: float, derived: str = ""):
+        line = f"{self.name},{case},{seconds:.6f},{derived}"
+        print(line, flush=True)
+        self.rows.append(line)
+
+    def note(self, case: str, text: str):
+        line = f"{self.name},{case},NA,{text}"
+        print(line, flush=True)
+        self.rows.append(line)

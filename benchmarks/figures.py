@@ -1,0 +1,191 @@
+"""One benchmark per paper table/figure (index in DESIGN.md §8).
+
+Dataset sizes are scaled to the CPU container; ``--full`` raises them.
+Systems:
+  rt       — RT-DBSCAN (this paper): grid engine (TPU adaptation)
+  fdbscan  — FDBSCAN baseline: LBVH traversal + union-find
+  fdbscan-ee — FDBSCAN with early traversal termination (§VI-B)
+  gdbscan  — G-DBSCAN: dense adjacency + BFS (O(n²) memory)
+  dclust   — CUDA-DClust+-style label propagation
+  brute    — tiled all-pairs engine (exact, O(n²) compute)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import dclust, fdbscan, gdbscan
+from repro.core import neighbors as nb
+from repro.core.dbscan import dbscan
+from repro.data import synth
+
+from .common import Reporter, timeit
+
+EPS = {
+    "roadnet2d": 0.02, "taxi2d": 0.08, "iono3d": 2.0, "highway": 0.05,
+}
+MINPTS = {"roadnet2d": 8, "taxi2d": 16, "iono3d": 16, "highway": 16}
+
+
+def _run(system, pts, eps, minpts):
+    if system == "rt":
+        return lambda: dbscan(pts, eps, minpts, engine="grid")
+    if system == "brute":
+        return lambda: dbscan(pts, eps, minpts, engine="brute")
+    if system == "fdbscan":
+        return lambda: fdbscan.run(pts, eps, minpts)
+    if system == "fdbscan-ee":
+        return lambda: fdbscan.run(pts, eps, minpts, early_exit=True)
+    if system == "gdbscan":
+        return lambda: gdbscan.run(pts, eps, minpts)
+    if system == "dclust":
+        return lambda: dclust.run(pts, eps, minpts)
+    raise ValueError(system)
+
+
+def fig4_small_eps(full: bool = False):
+    """Fig 4: small dataset (16K), ε sweep, all four systems; the derived
+    column is speedup over dclust (the paper normalizes to CUDA-DClust+)."""
+    r = Reporter("fig4_small_eps")
+    n = 16_384 if full else 8_192
+    pts = synth.load("roadnet2d", n, seed=0)
+    minpts = 8
+    for eps in (0.01, 0.02, 0.04):
+        base = None
+        for system in ("dclust", "rt", "fdbscan", "gdbscan", "brute"):
+            t = timeit(_run(system, pts, eps, minpts))
+            if system == "dclust":
+                base = t
+            r.row(f"{system}@eps={eps}", t, f"speedup_vs_dclust={base/t:.2f}")
+    return r.rows
+
+
+def fig5_eps(full: bool = False):
+    """Fig 5: ε sweep at fixed size, RT vs FDBSCAN, three datasets."""
+    r = Reporter("fig5_eps")
+    n = 200_000 if full else 30_000
+    for ds in ("roadnet2d", "taxi2d", "iono3d"):
+        pts = synth.load(ds, n, seed=1)
+        for scale in (0.5, 1.0, 2.0):
+            eps = EPS[ds] * scale
+            t_rt = timeit(_run("rt", pts, eps, MINPTS[ds]))
+            t_fd = timeit(_run("fdbscan", pts, eps, MINPTS[ds]), repeats=1)
+            r.row(f"{ds}@eps={eps:.3g}", t_rt,
+                  f"fdbscan={t_fd:.4f},speedup={t_fd/t_rt:.2f}")
+    return r.rows
+
+
+def fig6_size(full: bool = False):
+    """Fig 6 + Table I: size sweep, RT vs FDBSCAN."""
+    r = Reporter("fig6_size")
+    sizes = (50_000, 100_000, 200_000, 400_000) if full else \
+        (15_000, 30_000, 60_000)
+    for ds in ("roadnet2d", "taxi2d", "iono3d"):
+        for n in sizes:
+            pts = synth.load(ds, n, seed=2)
+            t_rt = timeit(_run("rt", pts, EPS[ds], MINPTS[ds]))
+            t_fd = timeit(_run("fdbscan", pts, EPS[ds], MINPTS[ds]),
+                          repeats=1)
+            r.row(f"{ds}@n={n}", t_rt,
+                  f"fdbscan={t_fd:.4f},speedup={t_fd/t_rt:.2f}")
+    return r.rows
+
+
+def fig7_growth(full: bool = False):
+    """Fig 7: growth-rate of execution time (log-log slope), 3DIono-like."""
+    r = Reporter("fig7_growth")
+    sizes = (25_000, 50_000, 100_000, 200_000) if full else \
+        (10_000, 20_000, 40_000)
+    times = {"rt": [], "fdbscan": []}
+    for n in sizes:
+        pts = synth.load("iono3d", n, seed=3)
+        for system in times:
+            reps = 2 if system == "rt" else 1
+            t = timeit(_run(system, pts, EPS["iono3d"], MINPTS["iono3d"]),
+                       repeats=reps)
+            times[system].append(t)
+            r.row(f"{system}@n={n}", t)
+    for system, ts in times.items():
+        slope = np.polyfit(np.log(sizes), np.log(ts), 1)[0]
+        r.row(f"{system}_growth_exponent", slope,
+              "t ~ n^slope (paper: RT grows slower than FDBSCAN)")
+    return r.rows
+
+
+def fig8_dense(full: bool = False):
+    """Fig 8 + Tables II/III: NGSIM-like dense data — ε sweep and size
+    sweep where no clusters form (empty ε-neighborhoods)."""
+    r = Reporter("fig8_dense")
+    n = 400_000 if full else 100_000
+    pts = synth.load("highway", n, seed=4)
+    for eps in (1e-4, 5e-4, 1e-3):
+        t_rt = timeit(_run("rt", pts, eps, 100))
+        t_fd = timeit(_run("fdbscan", pts, eps, 100), repeats=1)
+        r.row(f"eps={eps:g}@n={n}", t_rt,
+              f"fdbscan={t_fd:.4f},speedup={t_fd/t_rt:.1f}")
+    sizes = (100_000, 200_000, 400_000) if full else (50_000, 100_000)
+    for m in sizes:
+        p = synth.load("highway", m, seed=5)
+        t_rt = timeit(_run("rt", p, 1e-3, 100))
+        t_fd = timeit(_run("fdbscan", p, 1e-3, 100), repeats=1)
+        r.row(f"size@n={m}", t_rt,
+              f"fdbscan={t_fd:.4f},speedup={t_fd/t_rt:.1f}")
+    return r.rows
+
+
+def fig9_early_exit(full: bool = False):
+    """Fig 9: FDBSCAN early-traversal-termination impact vs RT."""
+    r = Reporter("fig9_early_exit")
+    sizes = (40_000, 80_000) if full else (10_000, 20_000)
+    for ds in ("taxi2d", "roadnet2d", "highway"):
+        for n in sizes:
+            pts = synth.load(ds, n, seed=6)
+            eps, mp = EPS[ds], MINPTS[ds]
+            t_rt = timeit(_run("rt", pts, eps, mp))
+            t_fd = timeit(_run("fdbscan", pts, eps, mp), repeats=1)
+            t_ee = timeit(_run("fdbscan-ee", pts, eps, mp), repeats=1)
+            r.row(f"{ds}@n={n}", t_rt,
+                  f"fdbscan={t_fd:.4f},fdbscan_ee={t_ee:.4f}")
+    return r.rows
+
+
+def fig10_breakdown(full: bool = False):
+    """§V-D: structure-build vs clustering-time breakdown."""
+    r = Reporter("fig10_breakdown")
+    n = 200_000 if full else 30_000
+    pts = synth.load("iono3d", n, seed=7)
+    eps, mp = EPS["iono3d"], MINPTS["iono3d"]
+
+    t_build_grid = timeit(lambda: nb.make_engine(pts, eps, engine="grid"))
+    eng = nb.make_engine(pts, eps, engine="grid")
+    t_cluster = timeit(lambda: dbscan(pts, eps, mp, eng=eng))
+    r.row("rt_build", t_build_grid,
+          f"cluster={t_cluster:.4f},"
+          f"build_frac={t_build_grid/(t_build_grid+t_cluster):.2f}")
+
+    t_build_bvh = timeit(lambda: nb.make_engine(pts, eps, engine="bvh"),
+                         repeats=1)
+    engb = nb.make_engine(pts, eps, engine="bvh")
+    t_cluster_b = timeit(lambda: dbscan(pts, eps, mp, eng=engb), repeats=1)
+    r.row("fdbscan_build", t_build_bvh,
+          f"cluster={t_cluster_b:.4f},"
+          f"build_frac={t_build_bvh/(t_build_bvh+t_cluster_b):.2f}")
+    return r.rows
+
+
+def table_reuse(full: bool = False):
+    """§VI-B: saved stage-1 counts amortize minPts re-runs."""
+    r = Reporter("table_reuse")
+    n = 100_000 if full else 30_000
+    pts = synth.load("taxi2d", n, seed=8)
+    eps = EPS["taxi2d"]
+    first = dbscan(pts, eps, 16, engine="grid")
+    t_cold = timeit(lambda: dbscan(pts, eps, 16, engine="grid"))
+    t_reuse = timeit(lambda: dbscan(pts, eps, 32, engine="grid",
+                                    precomputed_counts=first.counts))
+    r.row("cold", t_cold)
+    r.row("counts_reused", t_reuse, f"speedup={t_cold/t_reuse:.2f}")
+    return r.rows
+
+
+ALL_FIGS = [fig4_small_eps, fig5_eps, fig6_size, fig7_growth, fig8_dense,
+            fig9_early_exit, fig10_breakdown, table_reuse]

@@ -1,0 +1,46 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6_size]
+
+Prints ``name,case,seconds,derived`` CSV (plus the roofline table when
+dry-run results exist).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from . import figures
+
+    print("name,case,seconds,derived")
+    t0 = time.time()
+    for fig in figures.ALL_FIGS:
+        if args.only and fig.__name__ != args.only:
+            continue
+        try:
+            fig(full=args.full)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{fig.__name__},ERROR,NA,{type(e).__name__}: {e}",
+                  flush=True)
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+    if os.path.isdir("results/dryrun") and not args.only:
+        print("\n# Roofline (single-pod, from dry-run):")
+        from . import roofline
+        roofline.main(["--dir", "results/dryrun", "--mesh", "single"])
+
+
+if __name__ == "__main__":
+    main()

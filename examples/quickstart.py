@@ -1,0 +1,30 @@
+"""Quickstart: cluster a small 2-D dataset with RT-DBSCAN and inspect the
+result. Run: PYTHONPATH=src python examples/quickstart.py"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.dbscan import dbscan
+from repro.core import labels as L
+from repro.data import synth
+
+# three gaussian blobs + uniform noise; z = 0 exactly as the paper feeds
+# 2-D data to OptiX
+points = synth.blobs(2_000, k=3, seed=0)
+
+result = dbscan(points, eps=0.08, min_pts=8, engine="grid")
+
+labels = L.compact_labels(result.labels)
+print(f"clusters found : {labels.max() + 1}")
+print(f"cluster sizes  : {L.cluster_sizes(result.labels).tolist()}")
+print(f"core points    : {int(np.asarray(result.core).sum())}")
+print(f"noise points   : {int((labels == -1).sum())}")
+print(f"stage-2 rounds : {result.n_rounds} (deterministic scatter-min "
+      "union-find, DESIGN.md §2)")
+
+# the engines are interchangeable — same labels, different hardware mapping
+for engine in ("brute", "bvh"):
+    alt = dbscan(points, eps=0.08, min_pts=8, engine=engine)
+    same = np.array_equal(L.compact_labels(alt.labels), labels)
+    print(f"engine={engine:5s} matches grid: {same}")

@@ -1,0 +1,118 @@
+"""RT-DBSCAN (Algorithm 3), TPU edition.
+
+Two stages over one fused sweep primitive (DESIGN.md §2):
+
+  Stage 1 — core identification: one sweep counts ε-neighbors per point;
+            ``core = counts ≥ minPts`` (self included, sklearn convention).
+  Stage 2 — cluster formation: nothing was stored (the paper's memory-light
+            contract), so each hooking round *re-sweeps* and unions
+            deterministically:
+              root   = find-with-compression (pointer jumping)
+              m_i    = min root over core ε-neighbors of i   (the sweep)
+              hook   parent[root_i] min= m_i   for core i    (scatter-min)
+            Rounds converge in O(log n) (Shiloach–Vishkin); the paper's
+            atomic critical section (Alg. 3 line 13-14) becomes the
+            associative scatter-min.
+  Border — one final sweep attaches each non-core point to the *minimum*
+            core-neighbor root (deterministic refinement of the paper's
+            race-winner semantics); no core neighbor ⇒ noise (−1).
+
+Labels are component-min core indices; ``labels.compact_labels`` maps them to
+0..k−1 for reporting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import neighbors as nb
+from .union_find import hook_min, pointer_jump
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+class DBSCANResult(NamedTuple):
+    labels: jnp.ndarray      # (n,) int32: cluster root id, or -1 for noise
+    core: jnp.ndarray        # (n,) bool
+    counts: jnp.ndarray      # (n,) int32 ε-neighbor counts (incl. self)
+    n_rounds: int            # stage-2 hooking rounds executed
+
+
+@functools.lru_cache(maxsize=64)
+def _round_fn(sweep):
+    @jax.jit
+    def rnd(state, parent, core):
+        root = pointer_jump(parent)
+        _, m = sweep(state, core, root)
+        tgt = jnp.minimum(m, root)           # m includes own root for core pts
+        p2 = hook_min(root, root, tgt, valid=core)
+        p2 = pointer_jump(p2)
+        return p2, jnp.any(p2 != root)
+    return rnd
+
+
+@functools.lru_cache(maxsize=64)
+def _stage1_fn(sweep):
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def stage1(state, n):
+        zeros = jnp.zeros((n,), bool)
+        iota = jnp.arange(n, dtype=jnp.int32)
+        counts, _ = sweep(state, zeros, iota)
+        return counts
+    return stage1
+
+
+@functools.lru_cache(maxsize=64)
+def _finalize_fn(sweep):
+    @jax.jit
+    def finalize(state, parent, core):
+        root = pointer_jump(parent)
+        _, m = sweep(state, core, root)
+        labels = jnp.where(core, root,
+                           jnp.where(m != INT_MAX, m, -1)).astype(jnp.int32)
+        return labels
+    return finalize
+
+
+def dbscan(points, eps: float, min_pts: int, *, engine: str = "grid",
+           backend: str | None = None, chunk: int = 2048,
+           max_rounds: int = 64, precomputed_counts=None,
+           eng: nb.Engine | None = None) -> DBSCANResult:
+    """Cluster ``points`` (n, 3) — 2D data carries z = 0, as in the paper.
+
+    ``precomputed_counts`` implements the paper's §VI-B re-run use case:
+    saved stage-1 counts let a minPts re-run skip core identification
+    entirely. ``eng`` lets callers reuse a built structure across ε-runs of
+    the same dataset (build amortization, paper §V-D).
+    """
+    points = jnp.asarray(points, jnp.float32)
+    n = points.shape[0]
+    if eng is None:
+        eng = nb.make_engine(points, eps, engine=engine, backend=backend,
+                             chunk=chunk)
+
+    # Stage 1 — core identification.
+    if precomputed_counts is not None:
+        counts = jnp.asarray(precomputed_counts, jnp.int32)
+    else:
+        counts = _stage1_fn(eng.sweep)(eng.state, n)
+    core = counts >= jnp.int32(min_pts)
+
+    # Stage 2 — hooking rounds (python loop: host-visible round count, and a
+    # natural checkpoint boundary for the distributed driver).
+    parent = jnp.arange(n, dtype=jnp.int32)
+    rnd = _round_fn(eng.sweep)
+    n_rounds = 0
+    for _ in range(max_rounds):
+        parent, changed = rnd(eng.state, parent, core)
+        n_rounds += 1
+        if not bool(changed):
+            break
+
+    # Border attachment + final labels.
+    labels = _finalize_fn(eng.sweep)(eng.state, parent, core)
+    return DBSCANResult(labels=labels, core=core, counts=counts,
+                        n_rounds=n_rounds)

@@ -1,0 +1,3 @@
+"""Dataset substrate: synthetic analogues of the paper's four evaluation
+datasets (``synth``) and the sharded token pipeline for the LM workloads
+(``pipeline``)."""

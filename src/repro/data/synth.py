@@ -1,0 +1,110 @@
+"""Synthetic analogues of the paper's evaluation datasets (§V-A).
+
+The container is offline, so we generate structurally-matched stand-ins:
+
+  * ``roadnet2d``  ~ 3DRoad  (North Jutland road network, 435K 2D pts):
+    a random planar graph wandered by noisy walkers — long 1-D chains,
+    the worst case for diameter-bound algorithms.
+  * ``taxi2d``     ~ Porto   (1M+ taxi GPS): dense urban blob mixture plus
+    inter-blob route traffic.
+  * ``highway``    ~ NGSIM   (11M+ vehicle locations on 3 highways): extreme
+    global density along a few lanes; at the paper's tiny ε values the
+    ε-neighborhoods are *empty* (0 clusters formed, §V-C).
+  * ``iono3d``     ~ 3DIono  (1M+ 3D ionosphere readings): layered 3-D
+    sheets with smooth horizontal variation.
+
+All return float32 (n, 3) with z = 0 for 2D, exactly as the paper feeds
+OptiX. Deterministic in (name, n, seed).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _as3(points2d: np.ndarray) -> np.ndarray:
+    z = np.zeros((len(points2d), 1), np.float32)
+    return np.concatenate([points2d.astype(np.float32), z], axis=1)
+
+
+def roadnet2d(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n_nodes = max(16, n // 2000)
+    nodes = rng.uniform(0.0, 10.0, (n_nodes, 2))
+    pts = np.empty((n, 2), np.float32)
+    i = 0
+    while i < n:
+        a, b = rng.integers(0, n_nodes, 2)
+        seg = rng.integers(20, 200)
+        seg = min(seg, n - i)
+        t = np.linspace(0, 1, seg)[:, None]
+        line = nodes[a] * (1 - t) + nodes[b] * t
+        line += rng.normal(0, 0.004, line.shape)
+        pts[i:i + seg] = line
+        i += seg
+    return _as3(pts)
+
+
+def taxi2d(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n_hubs = 12
+    hubs = rng.uniform(0.0, 8.0, (n_hubs, 2))
+    n_blob = int(n * 0.7)
+    which = rng.integers(0, n_hubs, n_blob)
+    blob = hubs[which] + rng.normal(0, 0.15, (n_blob, 2)) * \
+        rng.uniform(0.3, 1.0, (n_hubs,))[which][:, None]
+    n_route = n - n_blob
+    a = hubs[rng.integers(0, n_hubs, n_route)]
+    b = hubs[rng.integers(0, n_hubs, n_route)]
+    t = rng.uniform(0, 1, (n_route, 1))
+    route = a * (1 - t) + b * t + rng.normal(0, 0.03, (n_route, 2))
+    return _as3(np.concatenate([blob, route]))
+
+
+def highway(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n_lanes = 9
+    lane = rng.integers(0, n_lanes, n)
+    x = rng.uniform(0.0, 1000.0, n)          # along-highway position
+    y = lane * 3.7 + rng.normal(0, 0.2, n)   # lane center ± jitter (meters)
+    pts = np.stack([x, y], axis=1)
+    return _as3(pts)
+
+
+def iono3d(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n_layers = 6
+    layer = rng.integers(0, n_layers, n)
+    lat = rng.uniform(-60.0, 60.0, n)
+    lon = rng.uniform(-180.0, 180.0, n) * 0.25
+    tec = (layer * 12.0 + 4.0 * np.sin(lat / 17.0) + 2.5 * np.cos(lon / 23.0)
+           + rng.normal(0, 0.8, n))
+    pts = np.stack([lat, lon, tec], axis=1).astype(np.float32)
+    return pts
+
+
+DATASETS = {
+    "roadnet2d": roadnet2d,
+    "taxi2d": taxi2d,
+    "highway": highway,
+    "iono3d": iono3d,
+}
+
+
+def load(name: str, n: int, seed: int = 0) -> np.ndarray:
+    return DATASETS[name](n, seed)
+
+
+def blobs(n: int, k: int = 5, dims: int = 2, seed: int = 0,
+          noise_frac: float = 0.1, std: float = 0.05) -> np.ndarray:
+    """Generic blob mixture for tests/examples."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0, 2.0, (k, dims))
+    n_noise = int(n * noise_frac)
+    n_blob = n - n_noise
+    which = rng.integers(0, k, n_blob)
+    pts = centers[which] + rng.normal(0, std, (n_blob, dims))
+    noise = rng.uniform(-0.5, 2.5, (n_noise, dims))
+    pts = np.concatenate([pts, noise]).astype(np.float32)
+    if dims == 2:
+        return _as3(pts)
+    return pts

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharded DBSCAN, checkpointing, elasticity,
+compressed collectives."""

@@ -1,0 +1,117 @@
+"""Public, backend-dispatching wrappers for the Pallas kernels.
+
+Backends:
+  * ``kernel``    — compiled Pallas (Mosaic) — the TPU production path;
+  * ``interpret`` — Pallas interpret mode — kernel-body semantics on CPU,
+                    used for validation in this (CPU-only) container;
+  * ``ref``       — the pure-jnp oracle (``ref.py``) — the CPU execution and
+                    dry-run lowering path (no Mosaic backend on CPU).
+
+Selection: explicit ``backend=`` argument, else ``$REPRO_KERNEL_BACKEND``,
+else ``kernel`` on TPU / ``ref`` otherwise. Wrappers own all padding so the
+kernels only ever see hardware-aligned shapes.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .gathered_sweep import gathered_sweep as _gathered_kernel
+from .morton import morton_encode as _morton_kernel
+from .pairwise_sweep import pairwise_sweep as _pairwise_kernel
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+BIG = 1e30
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    try:
+        platform = jax.devices()[0].platform
+    except RuntimeError:  # pragma: no cover
+        platform = "cpu"
+    return "kernel" if platform == "tpu" else "ref"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_to(x, n, axis, value):
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def fuse_core_root(core, root):
+    """Pre-fuse the core mask into the payload plane: root if core else MAX."""
+    return jnp.where(core, root, INT_MAX).astype(jnp.int32)
+
+
+def pairwise_sweep(queries, cands, core, root, eps2, *, backend=None,
+                   block_q: int = 256, block_c: int = 512):
+    """Brute ε-sweep. queries (nq,3), cands (nc,3), core/root (nc,).
+
+    Returns counts (nq,) int32, minroot (nq,) int32.
+    """
+    backend = backend or default_backend()
+    nq, nc = queries.shape[0], cands.shape[0]
+    eps2 = jnp.asarray(eps2, jnp.float32)
+    if backend == "ref":
+        valid = jnp.ones((nc,), bool)
+        return _ref.pairwise_sweep_ref(queries, cands, valid, core, root, eps2)
+    nq_p = _round_up(max(nq, 1), block_q)
+    nc_p = _round_up(max(nc, 1), block_c)
+    q = _pad_to(queries.astype(jnp.float32), nq_p, 0, BIG)
+    c = _pad_to(cands.astype(jnp.float32), nc_p, 0, BIG)
+    croot = _pad_to(fuse_core_root(core, root), nc_p, 0, INT_MAX)[None, :]
+    counts, minroot = _pairwise_kernel(
+        q, c.T, croot, eps2, block_q=block_q, block_c=block_c,
+        interpret=(backend == "interpret"))
+    return counts[:nq], minroot[:nq]
+
+
+def gathered_sweep(queries, cands, cand_valid, cand_core, cand_root, eps2, *,
+                   backend=None, block_b: int = 128, block_k: int = 512):
+    """Pre-gathered window ε-sweep. queries (b,3), cands (b,k,3), masks (b,k).
+
+    Returns counts (b,) int32, minroot (b,) int32.
+    """
+    backend = backend or default_backend()
+    b, k = cands.shape[0], cands.shape[1]
+    eps2 = jnp.asarray(eps2, jnp.float32)
+    if backend == "ref":
+        return _ref.gathered_sweep_ref(
+            queries, cands, cand_valid, cand_core, cand_root, eps2)
+    b_p = _round_up(max(b, 1), block_b)
+    k_p = _round_up(max(k, 1), block_k)
+    cands = jnp.where(cand_valid[..., None], cands.astype(jnp.float32), BIG)
+    q = _pad_to(queries.astype(jnp.float32), b_p, 0, BIG)
+    c = _pad_to(_pad_to(cands, k_p, 1, BIG), b_p, 0, BIG)
+    croot = jnp.where(cand_valid & cand_core, cand_root, INT_MAX).astype(jnp.int32)
+    croot = _pad_to(_pad_to(croot, k_p, 1, INT_MAX), b_p, 0, INT_MAX)
+    counts, minroot = _gathered_kernel(
+        q, jnp.transpose(c, (2, 0, 1)), croot, eps2, block_b=block_b,
+        block_k=block_k, interpret=(backend == "interpret"))
+    return counts[:b], minroot[:b]
+
+
+def morton_encode(coords, *, dims: int = 3, backend=None, block: int = 1024):
+    """Morton codes from quantized int32 coords (n, 3) -> (n,) int32."""
+    backend = backend or default_backend()
+    n = coords.shape[0]
+    if backend == "ref":
+        return _ref.morton_encode_ref(coords, dims=dims)
+    n_p = _round_up(max(n, 1), block)
+    c = _pad_to(coords.astype(jnp.int32), n_p, 0, 0)
+    codes = _morton_kernel(c.T, dims=dims, block=block,
+                           interpret=(backend == "interpret"))
+    return codes[:n]

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each Pallas kernel must match its oracle
+bit-for-bit on integer outputs and to float tolerance on float outputs, over
+shape/dtype sweeps (see tests/test_kernels.py). They are also the CPU
+execution path (the container has no Mosaic backend) and the path the
+multi-pod dry-run lowers.
+
+Sweep payload convention (used by both DBSCAN stages, fused — see DESIGN.md):
+  counts[i]   = |{ j : dist²(q_i, c_j) ≤ ε², c_j valid }|   (self included)
+  minroot[i]  = min{ root[j] : dist²(q_i, c_j) ≤ ε², c_j valid, core[j] }
+                (INT32_MAX if empty)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _dist2(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distance, (..., 3) vs (..., 3) broadcast-safe.
+
+    Math is always f32 regardless of storage dtype (bf16/f16 storage with f32
+    compute is the kernel contract; the Pallas kernels cast the same way).
+    """
+    acc = jnp.zeros(jnp.broadcast_shapes(q.shape[:-1], c.shape[:-1]),
+                    jnp.float32)
+    for k in range(3):
+        d = q[..., k].astype(jnp.float32) - c[..., k].astype(jnp.float32)
+        acc = acc + d * d
+    return acc
+
+
+def pairwise_sweep_ref(queries: jnp.ndarray, cands: jnp.ndarray,
+                       cand_valid: jnp.ndarray, cand_core: jnp.ndarray,
+                       cand_root: jnp.ndarray, eps2: jnp.ndarray):
+    """Brute-force sweep: every query against every candidate.
+
+    queries    (nq, 3) float
+    cands      (nc, 3) float
+    cand_valid (nc,)  bool
+    cand_core  (nc,)  bool
+    cand_root  (nc,)  int32
+    eps2       scalar float
+    returns counts (nq,) int32, minroot (nq,) int32
+    """
+    d2 = _dist2(queries[:, None, :], cands[None, :, :])  # (nq, nc)
+    hit = (d2 <= eps2) & cand_valid[None, :]
+    counts = hit.sum(axis=1).astype(jnp.int32)
+    root_or_max = jnp.where(hit & cand_core[None, :], cand_root[None, :], INT_MAX)
+    minroot = root_or_max.min(axis=1).astype(jnp.int32)
+    return counts, minroot
+
+
+def gathered_sweep_ref(queries: jnp.ndarray, cands: jnp.ndarray,
+                       cand_valid: jnp.ndarray, cand_core: jnp.ndarray,
+                       cand_root: jnp.ndarray, eps2: jnp.ndarray):
+    """Per-query pre-gathered candidate sweep (grid engine inner loop).
+
+    queries    (b, 3) float
+    cands      (b, k, 3) float — per-query candidate window
+    cand_valid (b, k) bool
+    cand_core  (b, k) bool
+    cand_root  (b, k) int32
+    returns counts (b,) int32, minroot (b,) int32
+    """
+    d2 = _dist2(queries[:, None, :], cands)  # (b, k)
+    hit = (d2 <= eps2) & cand_valid
+    counts = hit.sum(axis=1).astype(jnp.int32)
+    root_or_max = jnp.where(hit & cand_core, cand_root, INT_MAX)
+    minroot = root_or_max.min(axis=1).astype(jnp.int32)
+    return counts, minroot
+
+
+def morton_encode_ref(coords: jnp.ndarray, dims: int = 3) -> jnp.ndarray:
+    """30-bit Morton (Z-order) code from quantized integer coords.
+
+    coords (n, 3) int32 in [0, 1024) (10 bits/axis for 3D, 15 bits/axis 2D —
+    z column ignored when dims == 2).
+    """
+    def expand3(x):  # 10 -> 30 bits, 2-bit gaps
+        x = x & 0x3FF
+        x = (x | (x << 16)) & 0x030000FF
+        x = (x | (x << 8)) & 0x0300F00F
+        x = (x | (x << 4)) & 0x030C30C3
+        x = (x | (x << 2)) & 0x09249249
+        return x
+
+    def expand2(x):  # 15 -> 30 bits, 1-bit gaps
+        x = x & 0x7FFF
+        x = (x | (x << 8)) & 0x00FF00FF
+        x = (x | (x << 4)) & 0x0F0F0F0F
+        x = (x | (x << 2)) & 0x33333333
+        x = (x | (x << 1)) & 0x55555555
+        return x
+
+    x, y, z = coords[:, 0], coords[:, 1], coords[:, 2]
+    if dims == 2:
+        return (expand2(x) | (expand2(y) << 1)).astype(jnp.int32)
+    return (expand3(x) | (expand3(y) << 1) | (expand3(z) << 2)).astype(jnp.int32)

@@ -1,0 +1,61 @@
+"""Training driver CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+
+On a real TPU fleet this process runs per host (jax.distributed.initialize)
+with the production mesh; in this container it runs the same code on the
+local device(s). ``--reduced`` selects the smoke-scale config. The trainer
+checkpoints every ``--ckpt-every`` steps and resumes automatically
+(fault-tolerant restart); the straggler watchdog feeds
+``distributed.elastic.StragglerPolicy``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import ALL
+from ..data.pipeline import token_batches
+from ..distributed.elastic import StragglerPolicy
+from ..models import model as M
+from ..train import optimizer as opt_mod
+from ..train.trainer import TrainerConfig, train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ALL))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = ALL[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    ocfg = opt_mod.AdamWConfig(lr=args.lr, total_steps=args.steps)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every)
+    batches = token_batches(cfg, args.batch, args.seq, seed=args.seed)
+    policy = StragglerPolicy()
+
+    state, history = train_loop(cfg, tcfg, ocfg, batches, seed=args.seed)
+    last = history[-1] if history else {}
+    action = policy.decide(int(last.get("slow_steps", 0)),
+                           jax.device_count())
+    if action:
+        print(f"[elastic] policy suggests: {action}")
+    print(f"final loss: {last.get('loss'):.4f} after {len(history)} steps")
+    return state, history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Model zoo: the 10 assigned architectures as one config-driven family.
+
+  layers.py      norms, RoPE/M-RoPE, GQA/SWA attention (chunked online
+                 softmax — O(S·w) true FLOPs for sliding windows), MLP
+  moe.py         sort-based capacity MoE (gather-only dispatch, EP-shardable)
+  ssm.py         Mamba selective scan (chunked associative scan) + the Hymba
+                 parallel attn∥SSM head
+  xlstm.py       chunkwise mLSTM + recurrent sLSTM superblocks
+  transformer.py decoder-only assembly (attn/hymba/xlstm blocks, VLM merge)
+  encdec.py      Whisper-style encoder–decoder
+  model.py       params/init/apply + train/prefill/decode steps
+  sharding.py    logical-axis → mesh-axis rules (pod-DP, data-FSDP, model-TP)
+"""

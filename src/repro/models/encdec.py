@@ -1,0 +1,240 @@
+"""Whisper-style encoder–decoder backbone.
+
+Per assignment, the audio frontend is a stub: ``input_specs`` supplies
+precomputed frame embeddings (B, S_enc, d_model); a linear adapter stands in
+for the conv stem. 32L means 32 encoder + 32 decoder layers (true
+whisper-large-v3 topology). Positions are sinusoidal (no params), norms are
+LayerNorm, activations GELU, per the original. Decode carries a decoder
+self-attention cache plus precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import layers as ll
+from .transformer import PD, _norm_defs, _attn_defs, _ffn_defs, ring_cache_from_kv
+
+
+def enc_seq_len(seq_len: int) -> int:
+    return max(seq_len // 4, 8)
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    enc_block = {}
+    enc_block.update(_norm_defs(cfg, "ln1"))
+    enc_block["attn"] = _attn_defs(cfg)
+    enc_block.update(_norm_defs(cfg, "ln2"))
+    enc_block["ffn"] = _ffn_defs(cfg)
+
+    dec_block = {}
+    dec_block.update(_norm_defs(cfg, "ln1"))
+    dec_block["attn"] = _attn_defs(cfg)
+    dec_block.update(_norm_defs(cfg, "lnx"))
+    dec_block["xattn"] = _attn_defs(cfg)
+    dec_block.update(_norm_defs(cfg, "ln2"))
+    dec_block["ffn"] = _ffn_defs(cfg)
+
+    def stack(defs):
+        return jax.tree.map(
+            lambda v: PD((cfg.n_layers,) + v.shape, ("layers",) + v.axes,
+                         v.init), defs, is_leaf=lambda x: isinstance(x, PD))
+
+    defs = {
+        "adapter": PD((d, d), ("embed", None)),      # conv-stem stand-in
+        "embed": PD((cfg.vocab, d), ("vocab", "embed")),
+        "enc_blocks": stack(enc_block),
+        "dec_blocks": stack(dec_block),
+    }
+    defs.update({f"out_{k}": v for k, v in _norm_defs(cfg, "norm").items()})
+    defs.update({f"enc_out_{k}": v for k, v in _norm_defs(cfg, "norm").items()})
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = PD((cfg.vocab, d), ("vocab", "embed"))
+    return defs
+
+
+def _sinusoid(S: int, d: int, dtype):
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    pe = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(pe, dtype)
+
+
+def _sinusoid_at(pos, d: int, dtype):
+    """Sinusoidal PE for a single (traced) position scalar."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :] \
+        .astype(dtype)
+
+
+def _norm(cfg, p, name, x):
+    return ll.layer_norm(x, p[f"{name}_w"], p[f"{name}_b"], cfg.norm_eps)
+
+
+def _proj_heads(cfg, p, x, n_heads):
+    B, S, _ = x.shape
+    return jnp.einsum("bsd,dn->bsn", x, p.astype(x.dtype)) \
+        .reshape(B, S, n_heads, cfg.hd)
+
+
+def _attn(cfg, p, x, kv_x, *, causal):
+    B, S, _ = x.shape
+    q = _proj_heads(cfg, p["wq"], x, cfg.n_heads)
+    k = _proj_heads(cfg, p["wk"], kv_x, cfg.n_kv_heads)
+    v = _proj_heads(cfg, p["wv"], kv_x, cfg.n_kv_heads)
+    o = ll.attention(q, k, v, causal=causal, q_chunk=cfg.q_chunk,
+                     kv_chunk=cfg.kv_chunk)
+    return jnp.einsum("bsn,nd->bsd", o.reshape(B, S, -1),
+                      p["wo"].astype(x.dtype))
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames (B, S_enc, d_model) -> encoder states."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.einsum("bsd,de->bse", frames.astype(dtype),
+                   params["adapter"].astype(dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model, dtype)
+
+    def body(xx, p_l):
+        a = _attn(cfg, p_l["attn"], _norm(cfg, p_l, "ln1", xx),
+                  _norm(cfg, p_l, "ln1", xx), causal=False)
+        xx = xx + a
+        y = ll.mlp(_norm(cfg, p_l, "ln2", xx), p_l["ffn"], cfg.act)
+        return xx + y, None
+
+    body_fn = body
+    if cfg.remat == "block":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return _norm(cfg, {k.replace("enc_out_", ""): v for k, v in params.items()
+                       if k.startswith("enc_out_")}, "norm", x)
+
+
+def forward(cfg: ArchConfig, params, batch, *, collect_cache: bool = False):
+    """Training forward: (logits over decoder positions, None, aux=0)."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = ll.embed(tokens, params["embed"], dtype)
+    x = x + _sinusoid(S, cfg.d_model, dtype)
+
+    def body(xx, p_l):
+        h = _norm(cfg, p_l, "ln1", xx)
+        xx = xx + _attn(cfg, p_l["attn"], h, h, causal=True)
+        xx = xx + _attn(cfg, p_l["xattn"], _norm(cfg, p_l, "lnx", xx), enc,
+                        causal=False)
+        y = ll.mlp(_norm(cfg, p_l, "ln2", xx), p_l["ffn"], cfg.act)
+        return xx + y, None
+
+    body_fn = body
+    if cfg.remat == "block":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    x = _norm(cfg, {k.replace("out_", ""): v for k, v in params.items()
+                    if k.startswith("out_")}, "norm", x)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return ll.unembed(x, table), None, jnp.float32(0.0)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int,
+               enc_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    L, B, KV, hd = cfg.n_layers, batch_size, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((L, B, cache_len, KV, hd), dtype),
+        "v": jnp.zeros((L, B, cache_len, KV, hd), dtype),
+        "slot_pos": jnp.full((L, B, cache_len), -1, jnp.int32),
+        "xk": jnp.zeros((L, B, enc_len, KV, hd), dtype),
+        "xv": jnp.zeros((L, B, enc_len, KV, hd), dtype),
+        "x_pos": jnp.zeros((L, B, enc_len), jnp.int32),
+    }
+
+
+def prefill(cfg: ArchConfig, params, batch, cache_len: int):
+    """Encode + run decoder over the prompt, building self+cross caches."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = ll.embed(tokens, params["embed"], dtype)
+    x = x + _sinusoid(S, cfg.d_model, dtype)
+    enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1], dtype=jnp.int32),
+                               (B, enc.shape[1]))
+
+    def body(xx, p_l):
+        h = _norm(cfg, p_l, "ln1", xx)
+        q = _proj_heads(cfg, p_l["attn"]["wq"], h, cfg.n_heads)
+        k = _proj_heads(cfg, p_l["attn"]["wk"], h, cfg.n_kv_heads)
+        v = _proj_heads(cfg, p_l["attn"]["wv"], h, cfg.n_kv_heads)
+        o = ll.attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
+                         kv_chunk=cfg.kv_chunk)
+        xx = xx + jnp.einsum("bsn,nd->bsd", o.reshape(B, S, -1),
+                             p_l["attn"]["wo"].astype(xx.dtype))
+        kc, vc, sp = ring_cache_from_kv(k, v, cache_len)
+        xk = _proj_heads(cfg, p_l["xattn"]["wk"], enc, cfg.n_kv_heads)
+        xv = _proj_heads(cfg, p_l["xattn"]["wv"], enc, cfg.n_kv_heads)
+        xx = xx + _attn(cfg, p_l["xattn"], _norm(cfg, p_l, "lnx", xx), enc,
+                        causal=False)
+        y = ll.mlp(_norm(cfg, p_l, "ln2", xx), p_l["ffn"], cfg.act)
+        cl = {"k": kc, "v": vc, "slot_pos": sp, "xk": xk, "xv": xv,
+              "x_pos": enc_pos}
+        return xx + y, cl
+
+    x, cache = jax.lax.scan(body, x, params["dec_blocks"])
+    x = _norm(cfg, {k.replace("out_", ""): v for k, v in params.items()
+                    if k.startswith("out_")}, "norm", x)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return ll.unembed(x[:, -1:], table), cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    dtype = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    x = ll.embed(tokens, params["embed"], dtype)
+    x = x + _sinusoid_at(pos, cfg.d_model, dtype)
+
+    def body(i, st):
+        xx, c = st
+        p_l = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False),
+            params["dec_blocks"])
+        cl = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False), c)
+        h = _norm(cfg, p_l, "ln1", xx)
+        q = _proj_heads(cfg, p_l["attn"]["wq"], h, cfg.n_heads)
+        k = _proj_heads(cfg, p_l["attn"]["wk"], h, cfg.n_kv_heads)
+        v = _proj_heads(cfg, p_l["attn"]["wv"], h, cfg.n_kv_heads)
+        kc = jax.lax.dynamic_update_slice_in_dim(cl["k"], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cl["v"], v, pos, axis=1)
+        sp = jax.lax.dynamic_update_slice_in_dim(
+            cl["slot_pos"], jnp.full((B, 1), pos, jnp.int32), pos, axis=1)
+        o = ll.decode_attention(q, kc, vc, sp, jnp.full((B,), pos, jnp.int32))
+        xx = xx + jnp.einsum("bsn,nd->bsd", o.reshape(B, 1, -1),
+                             p_l["attn"]["wo"].astype(xx.dtype))
+        hq = _norm(cfg, p_l, "lnx", xx)
+        xq = _proj_heads(cfg, p_l["xattn"]["wq"], hq, cfg.n_heads)
+        xo = ll.decode_attention(
+            xq, cl["xk"], cl["xv"], cl["x_pos"],
+            jnp.full((B,), cl["xk"].shape[1], jnp.int32))
+        xx = xx + jnp.einsum("bsn,nd->bsd", xo.reshape(B, 1, -1),
+                             p_l["xattn"]["wo"].astype(xx.dtype))
+        y = ll.mlp(_norm(cfg, p_l, "ln2", xx), p_l["ffn"], cfg.act)
+        cl2 = dict(cl, k=kc, v=vc, slot_pos=sp)
+        c = jax.tree.map(
+            lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, i, 0),
+            c, cl2)
+        return (xx + y, c)
+
+    x, cache = jax.lax.fori_loop(0, cfg.n_layers, body, (x, cache))
+    x = _norm(cfg, {k.replace("out_", ""): v for k, v in params.items()
+                    if k.startswith("out_")}, "norm", x)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return ll.unembed(x, table), cache

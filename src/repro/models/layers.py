@@ -1,0 +1,290 @@
+"""Foundational layers shared by every architecture in the zoo.
+
+Numerics contract: parameters are stored f32, activations/matmuls run in the
+config compute dtype (bf16 at scale), and reductions that need it (norms,
+softmax, online-softmax accumulators) run f32.
+
+Attention is chunked online-softmax (flash-style, pure JAX):
+  * full/causal: scan over q chunks × scan over kv chunks with running
+    (max, sum, acc) — O(q_chunk × S) peak memory instead of O(S²). Causal
+    masking is applied per chunk pair; the rectangular HLO FLOPs (2× the
+    causal useful work) are visible in the roofline's MODEL/HLO ratio and
+    are a named hillclimb item (EXPERIMENTS.md §Perf).
+  * sliding window: per q chunk, a dynamic slice of width (window + q_chunk)
+    from a front-padded KV — true O(S · window) HLO FLOPs, which is what
+    makes the 524k-token decode shapes feasible for SWA archs.
+  * decode: single-position query against a (possibly ring-buffered) cache
+    with explicit per-slot position masking — one code path for full and
+    SWA caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import constrain
+
+# ---------------------------------------------------------------- norms ----
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def _rotate(x, ang):
+    # x (..., hd): rotate-half convention; ang (..., hd/2)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def apply_rope(x, pos, theta: float):
+    """x (B,S,N,hd), pos (B,S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    return _rotate(x, ang[:, :, None, :])
+
+
+MROPE_FRACTIONS = (0.25, 0.375, 0.375)  # t / h / w sections (Qwen2-VL)
+
+
+def apply_mrope(x, pos3, theta: float):
+    """M-RoPE: x (B,S,N,hd), pos3 (B,S,3) int32 — sectioned frequencies."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    n0 = int(half * MROPE_FRACTIONS[0])
+    n1 = int(half * MROPE_FRACTIONS[1])
+    sec = jnp.concatenate([
+        jnp.zeros((n0,), jnp.int32),
+        jnp.ones((n1,), jnp.int32),
+        jnp.full((half - n0 - n1,), 2, jnp.int32),
+    ])
+    pos_per_freq = jnp.take_along_axis(
+        pos3.astype(jnp.float32), sec[None, None, :].repeat(pos3.shape[0], 0)
+        .repeat(pos3.shape[1], 1), axis=2)  # (B,S,half)
+    ang = pos_per_freq * freqs
+    return _rotate(x, ang[:, :, None, :])
+
+
+# ------------------------------------------------------------ attention ----
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def _qkv_scores(q, k):
+    """q (B,C,KV,G,hd), k (B,T,KV,hd) -> scores (B,KV,G,C,T), f32."""
+    return jnp.einsum("bckgh,btkh->bkgct", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _apply_scores(p, v, *, f32_acc: bool = False):
+    """p (B,KV,G,C,T), v (B,T,KV,hd) -> (B,C,KV,G,hd)."""
+    if f32_acc:
+        return jnp.einsum("bkgct,btkh->bckgh", p, v,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bkgct,btkh->bckgh", p.astype(v.dtype), v)
+
+
+def _online_block(carry, scores, v_blk, mask):
+    """One online-softmax accumulation step; all accumulators f32.
+
+    carry = (m (B,KV,G,C), l (B,KV,G,C), acc (B,C,KV,G,hd) f32)."""
+    m, l, acc = carry
+    scores = jnp.where(mask, scores, NEG_INF)
+    m_blk = scores.max(axis=-1)
+    m_new = jnp.maximum(m, m_blk)
+    # guard fully-masked rows
+    safe_m = jnp.where(m_new == NEG_INF, 0.0, m_new)
+    p = jnp.exp(scores - safe_m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(jnp.where(m == NEG_INF, NEG_INF, m - safe_m))
+    # §Perf it. 2: the apply-dot reads a bf16 probability tile (halves the
+    # dominant score-tile traffic); row-sum reads the f32 tile inside the
+    # same fusion. (It. 3 — routing the row-sum through the bf16 tile too —
+    # was REFUTED: XLA then materialized both tiles; see EXPERIMENTS.md.)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] \
+        + _apply_scores(p.astype(v_blk.dtype), v_blk, f32_acc=True)
+    return (m_new, l_new, acc_new)
+
+
+def _finish(carry, dtype):
+    m, l, acc = carry
+    denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return (acc / denom).astype(dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Chunked online-softmax attention.
+
+    q (B,S,H,hd); k,v (B,S,KV,hd); GQA via grouping. Returns (B,S,H,hd).
+    """
+    B, S, H, hd = q.shape
+    S_kv = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    scale = float(1.0 / np.sqrt(hd))
+    q = (q * scale).reshape(B, S, KV, G, hd)
+    # pin DP sharding through the chunking reshapes — without this the
+    # partitioner can replicate the whole attention inner loop (§Perf it. 1)
+    q = constrain(q, "batch", None, None, None, None)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    q_chunk = min(q_chunk, S)
+    # pad both sequence axes to chunk multiples; masks keep padding inert
+    S_p = -(-S // q_chunk) * q_chunk
+    if S_p != S:
+        q = jnp.pad(q, ((0, 0), (0, S_p - S), (0, 0), (0, 0), (0, 0)))
+    n_q = S_p // q_chunk
+    qc = q.reshape(B, n_q, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    if window and S > window:
+        out = _attention_swa(qc, k, v, window=window, q_chunk=q_chunk)
+        return out[:, :S]
+
+    kv_chunk = min(kv_chunk, S_kv)
+    S_kv_p = -(-S_kv // kv_chunk) * kv_chunk
+    if S_kv_p != S_kv:
+        padw = ((0, 0), (0, S_kv_p - S_kv), (0, 0), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    n_kv = S_kv_p // kv_chunk
+    kc = k.reshape(B, n_kv, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_kv, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def per_q(i, q_blk):
+        q_pos = i * q_chunk + jnp.arange(q_chunk)
+
+        def per_kv(carry, inp):
+            j, k_blk, v_blk = inp
+            kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+            scores = _qkv_scores(q_blk, k_blk)
+            valid = (kv_pos < S_kv)[None, :]
+            if causal:
+                mask = ((kv_pos[None, :] <= q_pos[:, None]) & valid)
+            else:
+                mask = jnp.broadcast_to(valid, (q_chunk, kv_chunk))
+            return _online_block(carry, scores, v_blk,
+                                 mask[None, None, None]), None
+
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, q_chunk, KV, G, hd), jnp.float32))
+        carry, _ = jax.lax.scan(
+            per_kv, init, (jnp.arange(n_kv), kc, vc))
+        return _finish(carry, v.dtype)
+
+    out = jax.lax.map(lambda args: per_q(*args), (jnp.arange(n_q), qc))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S_p, H, hd)
+    return out[:, :S]
+
+
+def _attention_swa(qc, k, v, *, window: int, q_chunk: int):
+    """Sliding-window attention: O(S·window) FLOPs via per-chunk KV slices."""
+    n_q, B, _, KV, G, hd = qc.shape
+    S = k.shape[1]
+    S_p = n_q * q_chunk
+    W = window + q_chunk  # slice width covering the chunk's full span
+    # front pad = window (positions < 0); back pad keeps the last (possibly
+    # partial) q chunk's slice in bounds — masks exclude both paddings.
+    kp = jnp.pad(k, ((0, 0), (window, S_p - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, S_p - S), (0, 0), (0, 0)))
+
+    def per_q(i, q_blk):
+        q_pos = i * q_chunk + jnp.arange(q_chunk)
+        start = i * q_chunk  # padded index of real position i*q_chunk - window
+        k_blk = jax.lax.dynamic_slice_in_dim(kp, start, W, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(vp, start, W, axis=1)
+        kv_pos = start - window + jnp.arange(W)
+        scores = _qkv_scores(q_blk, k_blk)
+        mask = ((kv_pos[None, :] <= q_pos[:, None])
+                & (kv_pos[None, :] > q_pos[:, None] - window)
+                & (kv_pos[None, :] >= 0))[None, None, None]
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, q_chunk, KV, G, hd), jnp.float32))
+        return _finish(_online_block(init, scores, v_blk, mask), v.dtype)
+
+    out = jax.lax.map(lambda args: per_q(*args), (jnp.arange(n_q), qc))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S_p, KV * G, hd)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window: int = 0):
+    """Single-token attention against a cache.
+
+    q (B,1,H,hd); caches (B,T,KV,hd); slot_pos (B,T) the absolute position
+    stored in each cache slot (−1 = empty); pos (B,) current position.
+    One code path for full and ring-buffered SWA caches.
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    q = (q * float(1.0 / np.sqrt(hd))).reshape(B, 1, KV, G, hd)
+    scores = _qkv_scores(q, k_cache)  # (B,KV,G,1,T)
+    ok = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window:
+        ok &= slot_pos > (pos[:, None] - window)
+    scores = jnp.where(ok[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _apply_scores(p, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# ------------------------------------------------------------------ mlp ----
+
+
+def mlp(x, params, act: str):
+    if act == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, params["w1"].astype(x.dtype))
+        g = jnp.einsum("bsd,df->bsf", x, params["w3"].astype(x.dtype))
+        h = jax.nn.silu(h) * g
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["w1"].astype(x.dtype))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["w2"].astype(x.dtype))
+
+
+# ------------------------------------------------------------- lm parts ----
+
+
+def embed(tokens, table, dtype):
+    return table.astype(dtype)[tokens]
+
+
+def unembed(x, table):
+    return jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE; logits (B,S,V) f32, labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

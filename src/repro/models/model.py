@@ -1,0 +1,135 @@
+"""Unified model API over the zoo: defs/init/steps/input-specs per arch.
+
+``input_specs(cfg, shape)`` is the single source of truth for what each
+(arch × workload-shape) cell consumes — ShapeDtypeStructs for the dry-run
+(zero allocation) and matching synthetic arrays for smoke tests/examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import encdec, transformer
+from . import layers as ll
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.block == "encdec"
+
+
+def model_defs(cfg: ArchConfig):
+    return encdec.model_defs(cfg) if is_encdec(cfg) else \
+        transformer.model_defs(cfg)
+
+
+def init_params(cfg: ArchConfig, key):
+    return transformer.init_params(cfg, key, defs=model_defs(cfg))
+
+
+def param_axes(cfg: ArchConfig):
+    return transformer.param_axes(cfg, defs=model_defs(cfg))
+
+
+def param_shapes(cfg: ArchConfig):
+    return transformer.param_shapes(cfg, defs=model_defs(cfg))
+
+
+def forward(cfg: ArchConfig, params, batch):
+    if is_encdec(cfg):
+        return encdec.forward(cfg, params, batch)
+    return transformer.forward(cfg, params, batch)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, _, aux = forward(cfg, params, batch)
+    loss = ll.cross_entropy(logits, batch["labels"])
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+def prefill(cfg: ArchConfig, params, batch, cache_len: int):
+    if is_encdec(cfg):
+        return encdec.prefill(cfg, params, batch, cache_len)
+    return transformer.prefill(cfg, params, batch, cache_len)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    if is_encdec(cfg):
+        return encdec.decode_step(cfg, params, cache, tokens, pos)
+    return transformer.decode_step(cfg, params, cache, tokens, pos)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int):
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, batch_size, cache_len,
+                                 encdec.enc_seq_len(cache_len))
+    return transformer.init_cache(cfg, batch_size, cache_len)
+
+
+# ------------------------------------------------------------ input specs --
+
+
+def _batch_specs(cfg: ArchConfig, B: int, S: int, *, train: bool) -> Dict:
+    sds = jax.ShapeDtypeStruct
+    specs: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+    if train:
+        specs["labels"] = sds((B, S), jnp.int32)
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = sds((B, max(S // 4, 8), cfg.d_model),
+                                    jnp.float32)
+        specs["pos3"] = sds((B, S, 3), jnp.int32)
+    if is_encdec(cfg):
+        specs["frames"] = sds((B, encdec.enc_seq_len(S), cfg.d_model),
+                              jnp.float32)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": _batch_specs(cfg, B, S, train=True)}
+    if shape.kind == "prefill":
+        return {"batch": _batch_specs(cfg, B, S, train=False)}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def synth_batch(cfg: ArchConfig, B: int, S: int, key, *, train: bool = True):
+    """Concrete random inputs matching ``_batch_specs`` (smoke tests)."""
+    ks = jax.random.split(key, 4)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+    if train:
+        batch["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            ks[2], (B, max(S // 4, 8), cfg.d_model), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        batch["pos3"] = jnp.stack([pos, pos, pos], axis=-1)
+    if is_encdec(cfg):
+        batch["frames"] = 0.02 * jax.random.normal(
+            ks[3], (B, encdec.enc_seq_len(S), cfg.d_model), jnp.float32)
+    return batch
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params.
+
+    D = processed tokens for the cell. The roofline compares this against
+    compiled HLO FLOPs to expose remat/causal-mask/padding waste.
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token / seq

@@ -1,0 +1,101 @@
+"""Sort-based capacity MoE with gather-only dispatch.
+
+Dispatch strategy (production-shaped, GSPMD-friendly):
+  1. route: top-k over expert logits per token;
+  2. per sequence-group, sort the (token, k) entries by expert id;
+  3. an entry's rank within its expert segment (entry position − segment
+     start) gives its capacity slot; entries with rank ≥ C drop (standard
+     capacity semantics, C = S·k/E · capacity_factor);
+  4. the expert input buffer (G, E, C, d) is built **by gather**
+     (slot (e, c) ← sorted entry at segment_start[e] + c) — no scatter, so
+     the SPMD partitioner never falls back to replicating the buffer;
+  5. expert FFN is a batched einsum with weights sharded over the model axis
+     (expert parallelism);
+  6. combine is the inverse gather weighted by router probabilities.
+
+The one-hot dispatch-tensor formulation (GShard/Switch) is O(T·E·C) memory —
+infeasible at 1M tokens × 64 experts; this is O(T·k + E·C·d).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+
+def moe_ffn(x, params, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, act: str = "swiglu"):
+    """x (B, S, d) -> (B, S, d), aux load-balance loss (scalar f32).
+
+    Groups are sequences (B groups); all shapes static.
+    """
+    B, S, d = x.shape
+    E, K = n_experts, top_k
+    C = max(8, int(S * K / E * capacity_factor))
+    C = min(C, S * K)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)               # (B,S,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- flatten entries and sort by expert id (per group) ----
+    e_flat = top_e.reshape(B, S * K)                      # (B, T) T = S*K
+    order = jnp.argsort(e_flat, axis=1, stable=True)      # entry positions
+    es = jnp.take_along_axis(e_flat, order, axis=1)       # sorted expert ids
+
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left"))(es)
+    seg_end = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="right"))(es)
+    rank_sorted = jnp.arange(S * K)[None, :] - jnp.take_along_axis(
+        seg_start, es, axis=1)                            # rank of sorted entry
+
+    # ---- build expert buffers by gather: slot (e, c) <- sorted entry ----
+    slot_pos = seg_start[:, :, None] + jnp.arange(C)[None, None, :]  # (B,E,C)
+    slot_valid = slot_pos < seg_end[:, :, None]
+    slot_entry = jnp.take_along_axis(
+        order, jnp.clip(slot_pos, 0, S * K - 1).reshape(B, E * C),
+        axis=1).reshape(B, E, C)
+    slot_token = slot_entry // K                          # token index in seq
+    xs = jnp.take_along_axis(
+        x, slot_token.reshape(B, E * C)[..., None], axis=1
+    ).reshape(B, E, C, d)
+    xs = jnp.where(slot_valid[..., None], xs, 0.0)
+
+    # ---- expert FFN (weights (E, d, f) / (E, f, d); EP over model axis) ----
+    # ZeRO-3 weight flow (§Perf it. B4): storage is (experts→model, d→data);
+    # constraining the *use* to (model, replicated, replicated) makes GSPMD
+    # all-gather the per-layer weight slice (≈2 GB/layer wire) instead of
+    # all-reducing activation-sized partial sums (≈17 GB/layer wire).
+    def _w(name):
+        return constrain(params[name].astype(x.dtype), "model", None, None)
+
+    if act == "swiglu":
+        h = jnp.einsum("becd,edf->becf", xs, _w("w1"))
+        g = jnp.einsum("becd,edf->becf", xs, _w("w3"))
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xs, _w("w1")))
+    ys = jnp.einsum("becf,efd->becd", h,
+                    constrain(params["w2"].astype(x.dtype), "model", None,
+                              None))
+
+    # ---- combine: inverse gather back to (token, k) entries ----
+    # entry -> its slot (e, c): c is the entry's rank (valid if < C)
+    inv = jnp.argsort(order, axis=1, stable=True)         # entry -> sorted pos
+    rank_entry = jnp.take_along_axis(rank_sorted, inv, axis=1)  # (B, T)
+    keep = rank_entry < C
+    flat_slot = e_flat * C + jnp.clip(rank_entry, 0, C - 1)
+    y_entry = jnp.take_along_axis(
+        ys.reshape(B, E * C, d), flat_slot[..., None], axis=1)   # (B,T,d)
+    w_entry = (top_p.reshape(B, S * K) * keep).astype(x.dtype)
+    y = (y_entry * w_entry[..., None]).reshape(B, S, K, d).sum(axis=2)
+
+    # ---- aux load-balance loss (Switch-style) ----
+    me = probs.mean(axis=(0, 1))                          # (E,)
+    ce = jax.nn.one_hot(top_e[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return y, aux

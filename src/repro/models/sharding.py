@@ -1,0 +1,132 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Every parameter/activation dimension carries a *logical* axis name; rules map
+those to mesh axes. The production mapping (DESIGN.md §4):
+
+  batch   → ("pod", "data")   pure DP across pods, DP within pod
+  embed   → "data"            FSDP / ZeRO-3: params + optimizer state sharded
+  heads/kv/ff/vocab/experts → "model"   tensor / expert parallelism
+
+Optimizer state inherits the parameter specs, so large archs (72B) are fully
+sharded over data × model = 256 ways within a pod, replicated across pods.
+Dims that don't divide the mesh axis are fine under jit/GSPMD (implicit
+padding); shard_map paths (distributed DBSCAN) require divisibility and
+enforce it themselves.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def default_rules(mesh) -> dict:
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes) or (None,)
+    return {
+        "batch": batch if len(batch) > 1 else batch[0],
+        "embed": "data" if "data" in axes else None,
+        "heads": "model" if "model" in axes else None,
+        "kv": "model" if "model" in axes else None,
+        "ff": "model" if "model" in axes else None,
+        "vocab": "model" if "model" in axes else None,
+        "experts": "model" if "model" in axes else None,
+        "expert_embed": "data" if "data" in axes else None,
+        "seq": None, "hd": None, "layers": None, "state": None,
+        "cap": None, None: None,
+    }
+
+
+def serve_rules(mesh) -> dict:
+    """Inference sharding: TP-only parameters (no FSDP d-shard).
+
+    Training wants ZeRO-3 (optimizer state dominates, gradients amortize the
+    gathers); serving has no optimizer state, and a d-dim shard over `data`
+    makes GSPMD emit per-layer activation *all-reduces* (2·|act|·L wire) —
+    measured 838 GB/step on moonshot prefill (§Perf iteration B1). TP-only
+    weights trade replicated-across-data memory for collapsing that term.
+    """
+    rules = default_rules(mesh)
+    rules["embed"] = None
+    return rules
+
+
+def spec_for(axes: tuple, rules: dict) -> P:
+    return P(*(rules.get(a) for a in axes))
+
+
+def sanitize_spec(mesh, shape: tuple, spec: P) -> P:
+    """Drop mesh axes from dims they don't evenly divide.
+
+    GSPMD rejects non-divisible input shardings at lowering; odd vocab sizes
+    (49155, 51866, 32001) and small head counts (kv=2..8 vs model=16) fall
+    back to replication on that dim — recorded, not fatal.
+    """
+    out = []
+    for i in range(len(shape)):
+        entry = spec[i] if i < len(spec) else None
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        out.append(entry if shape[i] % prod == 0 else None)
+    return P(*out)
+
+
+def sharding_for(mesh, axes: tuple, rules: Optional[dict] = None,
+                 shape: Optional[tuple] = None):
+    rules = rules or default_rules(mesh)
+    spec = spec_for(axes, rules)
+    if shape is not None:
+        spec = sanitize_spec(mesh, shape, spec)
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh, axes_tree, rules: Optional[dict] = None):
+    rules = rules or default_rules(mesh)
+    return jax.tree.map(lambda axes: sharding_for(mesh, axes, rules),
+                        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def constrain(x, *logical_axes):
+    """Activation sharding constraint by logical axis names.
+
+    ``constrain(q, "batch", None, "model", None)`` pins the batch dim to the
+    DP axes and dim 2 to the TP axis — *if* a mesh is ambient and the dim is
+    divisible; otherwise it's a no-op. This is the guard rail that stops the
+    SPMD partitioner from replicating activations when reshape chains make
+    propagation ambiguous (the dominant waste found by the roofline
+    breakdown — EXPERIMENTS.md §Perf iteration 1).
+    """
+    am = None
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or not am.axis_names:
+            from jax._src.mesh import thread_resources  # legacy `with mesh:`
+            pm = thread_resources.env.physical_mesh
+            am = pm if (pm is not None and not pm.empty) else None
+    except Exception:  # pragma: no cover
+        return x
+    if am is None or not am.axis_names or am.size <= 1:
+        return x
+    names = am.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    spec = []
+    for i, a in enumerate(logical_axes):
+        entry = None
+        if a == "batch" and batch_axes:
+            entry = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        elif a in names:
+            entry = a
+        if entry is not None:
+            prod = 1
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                prod *= am.shape[ax]
+            if x.shape[i] % prod != 0:
+                entry = None
+        spec.append(entry)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

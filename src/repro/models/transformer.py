@@ -1,0 +1,565 @@
+"""Decoder-only model assembly for every non-enc-dec architecture.
+
+One config-driven family: GQA/SWA attention blocks (dense + MoE), Hymba
+parallel attn∥SSM blocks, and xLSTM superblocks — each expressed as a
+``lax.scan`` over stacked layer parameters (HLO size O(1) in depth, remat per
+block), with a single cache convention shared by prefill and decode.
+
+Parameters are declared as ``PD(shape, logical_axes, init)`` leaves; the same
+declaration drives initialization (f32) and sharding (sharding.spec_for), so
+init and distribution can never drift apart.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import layers as ll
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xl
+
+
+class PD(NamedTuple):
+    shape: tuple
+    axes: tuple          # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | normal_out | zeros | ones | f_bias | a_log
+
+
+# ------------------------------------------------------- param definitions -
+
+
+def _attn_defs(cfg: ArchConfig) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    defs = {
+        "wq": PD((d, H * hd), ("embed", "heads")),
+        "wk": PD((d, KV * hd), ("embed", "kv")),
+        "wv": PD((d, KV * hd), ("embed", "kv")),
+        "wo": PD((H * hd, d), ("heads", "embed"), "normal_out"),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = PD((hd,), ("hd",), "ones")
+        defs["k_norm"] = PD((hd,), ("hd",), "ones")
+    return defs
+
+
+def _norm_defs(cfg: ArchConfig, name: str) -> dict:
+    if cfg.norm == "ln":
+        return {f"{name}_w": PD((cfg.d_model,), ("embed",), "ones"),
+                f"{name}_b": PD((cfg.d_model,), ("embed",), "zeros")}
+    return {f"{name}_w": PD((cfg.d_model,), ("embed",), "ones")}
+
+
+def _ffn_defs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.is_moe:
+        # expert parallelism: experts → model axis; the (small) per-expert
+        # ffn dim stays unsharded; d carries its own logical axis so expert
+        # weights keep the FSDP shard even under TP-only serving rules
+        # (experts are ~95% of MoE params — §Perf iteration B3).
+        e = cfg.n_experts
+        defs = {
+            "router": PD((d, e), ("embed", "experts")),
+            "w1": PD((e, d, f), ("experts", "expert_embed", None)),
+            "w2": PD((e, f, d), ("experts", None, "expert_embed"),
+                     "normal_out"),
+        }
+        if cfg.act == "swiglu":
+            defs["w3"] = PD((e, d, f), ("experts", "expert_embed", None))
+        return defs
+    if f == 0:
+        return {}
+    defs = {
+        "w1": PD((d, f), ("embed", "ff")),
+        "w2": PD((f, d), ("ff", "embed"), "normal_out"),
+    }
+    if cfg.act == "swiglu":
+        defs["w3"] = PD((d, f), ("embed", "ff"))
+    return defs
+
+
+def _mamba_defs(cfg: ArchConfig) -> dict:
+    d, N = cfg.d_model, cfg.ssm_state
+    e = d  # inner width
+    return {
+        "w_in": PD((d, e), ("embed", "ff")),
+        "w_gate": PD((d, e), ("embed", "ff")),
+        "w_dt": PD((e,), ("ff",)),
+        "dt_bias": PD((1,), (None,), "zeros"),
+        "w_B": PD((e, N), ("ff", "state")),
+        "w_C": PD((e, N), ("ff", "state")),
+        "A_log": PD((e, N), ("ff", "state"), "a_log"),
+        "D": PD((e,), ("ff",), "ones"),
+        "w_out": PD((e, d), ("ff", "embed"), "normal_out"),
+    }
+
+
+def _mlstm_defs(cfg: ArchConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    e = 2 * d
+    return {
+        "w_up": PD((d, 2 * e), ("embed", "ff")),
+        "w_q": PD((e, d), ("ff", None)),   # row-parallel: contract over e
+        "w_k": PD((e, d), ("ff", None)),
+        "w_i": PD((d, H), ("embed", None)),
+        "b_i": PD((H,), (None,), "zeros"),
+        "w_f": PD((d, H), ("embed", None)),
+        "b_f": PD((H,), (None,), "f_bias"),
+        "w_down": PD((e, d), ("ff", "embed"), "normal_out"),
+        "norm_w": PD((d,), ("embed",), "ones"),
+    }
+
+
+def _slstm_defs(cfg: ArchConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    return {
+        "w_x": PD((d, 4 * d), ("embed", "ff")),
+        "r": PD((H, dh, 4 * dh), (None, "hd", None)),
+        "b": PD((4 * d,), ("ff",), "zeros"),
+        "w_out": PD((d, d), ("embed", None), "normal_out"),
+        "norm_w": PD((d,), ("embed",), "ones"),
+    }
+
+
+def block_defs(cfg: ArchConfig) -> dict:
+    """Parameter defs for ONE layer (caller stacks over layers)."""
+    if cfg.block == "xlstm":
+        raise ValueError("xlstm uses superblock defs")
+    defs = {}
+    defs.update(_norm_defs(cfg, "ln1"))
+    defs["attn"] = _attn_defs(cfg)
+    if cfg.block == "hymba":
+        defs["ssm"] = _mamba_defs(cfg)
+        defs["mix_a"] = PD((1,), (None,), "ones")
+        defs["mix_s"] = PD((1,), (None,), "ones")
+    ffn = _ffn_defs(cfg)
+    if ffn:
+        defs.update(_norm_defs(cfg, "ln2"))
+        defs["ffn"] = ffn
+    return defs
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    defs = {"embed": PD((cfg.vocab, d), ("vocab", "embed"))}
+    defs.update({f"out_{k}": v for k, v in _norm_defs(cfg, "norm").items()})
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = PD((cfg.vocab, d), ("vocab", "embed"))
+    if cfg.block == "xlstm":
+        every = cfg.slstm_every or (cfg.n_layers + 1)
+        n_super = max(1, cfg.n_layers // every)
+        n_m = every - 1
+        m = _mlstm_defs(cfg)
+        s = _slstm_defs(cfg)
+        defs["m_blocks"] = {k: PD((n_super, n_m) + v.shape,
+                                  ("layers", "layers") + v.axes, v.init)
+                            for k, v in m.items()}
+        defs["s_blocks"] = {k: PD((n_super,) + v.shape,
+                                  ("layers",) + v.axes, v.init)
+                            for k, v in s.items()}
+    else:
+        bd = block_defs(cfg)
+        defs["blocks"] = jax.tree.map(
+            lambda v: PD((cfg.n_layers,) + v.shape, ("layers",) + v.axes,
+                         v.init),
+            bd, is_leaf=lambda x: isinstance(x, PD))
+    if cfg.frontend == "vision":
+        defs["patch_proj"] = PD((d, d), ("embed", None))
+    return defs
+
+
+def _init_leaf(pd: PD, key, cfg: ArchConfig):
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, jnp.float32)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, jnp.float32)
+    if pd.init == "f_bias":
+        return jnp.full(pd.shape, 3.0, jnp.float32)
+    if pd.init == "a_log":
+        n = pd.shape[-1]
+        base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, pd.shape)
+    scale = 0.02
+    if pd.init == "normal_out":
+        scale = 0.02 / np.sqrt(max(2 * cfg.n_layers, 1))
+    return scale * jax.random.normal(key, pd.shape, jnp.float32)
+
+
+def init_params(cfg: ArchConfig, key, defs=None):
+    defs = defs or model_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, PD))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(pd, k, cfg) for pd, k in zip(leaves, keys)])
+
+
+def param_axes(cfg: ArchConfig, defs=None):
+    defs = defs or model_defs(cfg)
+    return jax.tree.map(lambda pd: pd.axes, defs,
+                        is_leaf=lambda x: isinstance(x, PD))
+
+
+def param_shapes(cfg: ArchConfig, defs=None):
+    defs = defs or model_defs(cfg)
+    return jax.tree.map(lambda pd: jax.ShapeDtypeStruct(pd.shape, jnp.float32),
+                        defs, is_leaf=lambda x: isinstance(x, PD))
+
+
+# ----------------------------------------------------------- block apply ---
+
+
+def _norm(cfg, p, name, x):
+    if cfg.norm == "ln":
+        return ll.layer_norm(x, p[f"{name}_w"], p[f"{name}_b"], cfg.norm_eps)
+    return ll.rms_norm(x, p[f"{name}_w"], cfg.norm_eps)
+
+
+def _project_qkv(cfg, p, x, pos):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dn->bsn", x, p["wq"].astype(x.dtype)) \
+        .reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dn->bsn", x, p["wk"].astype(x.dtype)) \
+        .reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dn->bsn", x, p["wv"].astype(x.dtype)) \
+        .reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = ll.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = ll.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope == "rope":
+        pos1 = pos if pos.ndim == 2 else pos[..., 0]
+        q = ll.apply_rope(q, pos1, cfg.rope_theta)
+        k = ll.apply_rope(k, pos1, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = ll.apply_mrope(q, pos, cfg.rope_theta)
+        k = ll.apply_mrope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(cfg, p, x, pos, *, causal=True):
+    q, k, v = _project_qkv(cfg, p, x, pos)
+    o = ll.attention(q, k, v, causal=causal, window=cfg.window,
+                     q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    B, S = x.shape[:2]
+    return jnp.einsum("bsn,nd->bsd", o.reshape(B, S, -1),
+                      p["wo"].astype(x.dtype))
+
+
+def attn_decode_apply(cfg, p, x, cache_l, pos):
+    """x (B,1,d); cache_l = {k,v (B,T,KV,hd), slot_pos (B,T)}; pos scalar."""
+    B = x.shape[0]
+    if cfg.rope == "mrope":  # text-only decode: all three position streams = pos
+        posb = jnp.full((B, 1, 3), pos, jnp.int32)
+    else:
+        posb = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, posb)
+    T = cache_l["k"].shape[1]
+    slot = pos % T if cfg.window else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, slot, axis=1)
+    sp = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["slot_pos"], jnp.full((B, 1), pos, jnp.int32), slot, axis=1)
+    o = ll.decode_attention(q, kc, vc, sp, jnp.full((B,), pos, jnp.int32),
+                            window=cfg.window)
+    out = jnp.einsum("bsn,nd->bsd", o.reshape(B, 1, -1),
+                     p["wo"].astype(x.dtype))
+    return out, {"k": kc, "v": vc, "slot_pos": sp}
+
+
+def ffn_apply(cfg, p, x):
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_ffn(x, p, n_experts=cfg.n_experts,
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 act=cfg.act)
+        return y, aux
+    return ll.mlp(x, p, cfg.act), jnp.float32(0.0)
+
+
+def block_apply(cfg, p, x, pos, cache_l=None, decode_pos=None):
+    """One residual block. Returns (x, new_cache_l, aux_loss)."""
+    decode = decode_pos is not None
+    h = _norm(cfg, p, "ln1", x)
+    new_cache = {}
+    if cfg.block == "hymba":
+        if decode:
+            a, kvc = attn_decode_apply(cfg, p["attn"], h, cache_l, decode_pos)
+            s, hstate = ssm_mod.mamba_head_step(h, p["ssm"],
+                                                cache_l["ssm_h"])
+            new_cache = dict(kvc, ssm_h=hstate)
+        else:
+            a = attn_apply(cfg, p["attn"], h, pos)
+            s, hstate = ssm_mod.mamba_head(h, p["ssm"], state=cfg.ssm_state,
+                                           chunk=cfg.ssm_chunk)
+            if cache_l is not None:
+                new_cache["ssm_h"] = hstate
+        ma = p["mix_a"].astype(x.dtype)
+        ms = p["mix_s"].astype(x.dtype)
+        x = x + (ma * a + ms * s) / (ma + ms + 1e-6)
+    else:
+        if decode:
+            a, new_cache = attn_decode_apply(cfg, p["attn"], h, cache_l,
+                                             decode_pos)
+        else:
+            a = attn_apply(cfg, p["attn"], h, pos)
+        x = x + a
+    aux = jnp.float32(0.0)
+    if "ffn" in p:
+        y, aux = ffn_apply(cfg, p["ffn"], _norm(cfg, p, "ln2", x))
+        x = x + y
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------ xlstm stack --
+
+
+def xlstm_apply(cfg, params, x, carry=None, step=False):
+    """Scan over superblocks of (slstm_every−1) mLSTM + 1 sLSTM layers."""
+    every = cfg.slstm_every or (cfg.n_layers + 1)
+    n_m = every - 1
+    B = x.shape[0]
+    H = cfg.n_heads
+    d = cfg.d_model
+    e = 2 * d
+    dqk, dv = d // H, e // H
+    n_super = max(1, cfg.n_layers // every)
+    if carry is None:
+        carry = {
+            "mC": jnp.zeros((n_super, n_m, B, H, dqk, dv), jnp.float32),
+            "mn": jnp.zeros((n_super, n_m, B, H, dqk), jnp.float32),
+            "sh": jnp.zeros((n_super, 3, B, d), jnp.float32),
+        }
+
+    def super_body(xx, inp):
+        mp, sp, mC, mn, sh = inp
+
+        def m_body(xx, minp):
+            mp_l, C_l, n_l = minp
+            h = ll.rms_norm(xx, mp_l["norm_w"], cfg.norm_eps)
+            y, (C2, n2) = xl.mlstm_block(h, mp_l, n_heads=H,
+                                         chunk=cfg.ssm_chunk,
+                                         carry=(C_l, n_l), step=step)
+            return xx + y, (C2, n2)
+
+        xx, (mC2, mn2) = jax.lax.scan(m_body, xx, (mp, mC, mn))
+        h = ll.rms_norm(xx, sp["norm_w"], cfg.norm_eps)
+        y, sc = xl.slstm_block(h, sp, n_heads=H,
+                               carry=tuple(sh), step=step)
+        xx = xx + y
+        return xx, (mC2, mn2, jnp.stack(sc))
+
+    x, (mC, mn, sh) = jax.lax.scan(
+        super_body, x,
+        (params["m_blocks"], params["s_blocks"],
+         carry["mC"], carry["mn"], carry["sh"]))
+    return x, {"mC": mC, "mn": mn, "sh": sh}
+
+
+# --------------------------------------------------------------- forward ---
+
+
+def _positions(cfg, batch, B, S):
+    if cfg.rope == "mrope":
+        return batch["pos3"]
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
+def embed_inputs(cfg, params, batch, dtype):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = ll.embed(tokens, params["embed"], dtype)
+    if cfg.frontend == "vision":
+        pe = jnp.einsum("bsd,de->bse", batch["patch_embeds"].astype(dtype),
+                        params["patch_proj"].astype(dtype))
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params, batch, *, collect_cache: bool = False):
+    """Full-sequence forward (train / prefill). Returns (logits, cache, aux)."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_inputs(cfg, params, batch, dtype)
+    pos = _positions(cfg, batch, B, S)
+
+    cache = None
+    if cfg.block == "xlstm":
+        x, carry = xlstm_apply(cfg, params, x)
+        if collect_cache:
+            cache = carry
+        aux = jnp.float32(0.0)
+    else:
+        def body(xx, p_l):
+            xx, cl, aux_l = block_apply(cfg, p_l, xx, pos,
+                                        cache_l=({} if not collect_cache
+                                                 else None))
+            return xx, aux_l
+
+        body_fn = body
+        if cfg.remat == "block":
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, auxs = jax.lax.scan(body_fn, x, params["blocks"])
+        aux = auxs.sum()
+        # (prefill KV caches are built by ``prefill`` in model.py, which
+        #  re-runs projections per layer; training never materializes them)
+    x = _norm(cfg, {k.replace("out_", ""): v for k, v in params.items()
+                    if k.startswith("out_")}, "norm", x)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = ll.unembed(x, table)
+    return logits, cache, aux
+
+
+# ------------------------------------------------------- prefill / decode --
+
+
+def ring_cache_from_kv(k, v, T: int):
+    """Pack full-sequence K/V (B,S,KV,hd) into a slot cache of length T.
+
+    T ≥ S: plain pad. T < S (sliding window): slot s keeps the latest
+    position p < S with p ≡ s (mod T) — the ring layout decode writes into.
+    Returns (k_cache, v_cache, slot_pos (B,T) int32, −1 = empty).
+    """
+    B, S = k.shape[:2]
+    if T >= S:
+        padw = ((0, 0), (0, T - S), (0, 0), (0, 0))
+        kc = jnp.pad(k, padw)
+        vc = jnp.pad(v, padw)
+        sp = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                              jnp.full((T - S,), -1, jnp.int32)])
+    else:
+        slots = jnp.arange(T, dtype=jnp.int32)
+        p = (S - 1) - ((S - 1 - slots) % T)
+        kc = k[:, p]
+        vc = v[:, p]
+        sp = p
+    return kc, vc, jnp.broadcast_to(sp, (B, T)).astype(jnp.int32)
+
+
+def prefill(cfg: ArchConfig, params, batch, cache_len: int):
+    """Full-sequence forward that also builds the decode cache."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_inputs(cfg, params, batch, dtype)
+    pos = _positions(cfg, batch, B, S)
+    T = min(cfg.window, cache_len) if cfg.window else cache_len
+
+    if cfg.block == "xlstm":
+        x, carry = xlstm_apply(cfg, params, x)
+        cache = carry
+    else:
+        def body(xx, p_l):
+            h = _norm(cfg, p_l, "ln1", xx)
+            cl = {}
+            if cfg.block == "hymba":
+                q, k, v = _project_qkv(cfg, p_l["attn"], h, pos)
+                o = ll.attention(q, k, v, causal=True, window=cfg.window,
+                                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+                a = jnp.einsum("bsn,nd->bsd", o.reshape(B, S, -1),
+                               p_l["attn"]["wo"].astype(xx.dtype))
+                s, hstate = ssm_mod.mamba_head(h, p_l["ssm"],
+                                               state=cfg.ssm_state,
+                                               chunk=cfg.ssm_chunk)
+                kc, vc, sp = ring_cache_from_kv(k, v, T)
+                cl = {"k": kc, "v": vc, "slot_pos": sp, "ssm_h": hstate}
+                ma = p_l["mix_a"].astype(xx.dtype)
+                ms = p_l["mix_s"].astype(xx.dtype)
+                xx = xx + (ma * a + ms * s) / (ma + ms + 1e-6)
+            else:
+                q, k, v = _project_qkv(cfg, p_l["attn"], h, pos)
+                o = ll.attention(q, k, v, causal=True, window=cfg.window,
+                                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+                a = jnp.einsum("bsn,nd->bsd", o.reshape(B, S, -1),
+                               p_l["attn"]["wo"].astype(xx.dtype))
+                kc, vc, sp = ring_cache_from_kv(k, v, T)
+                cl = {"k": kc, "v": vc, "slot_pos": sp}
+                xx = xx + a
+            if "ffn" in p_l:
+                y, _ = ffn_apply(cfg, p_l["ffn"], _norm(cfg, p_l, "ln2", xx))
+                xx = xx + y
+            return xx, cl
+
+        x, cache = jax.lax.scan(body, x, params["blocks"])
+
+    x = _norm(cfg, {k.replace("out_", ""): v for k, v in params.items()
+                    if k.startswith("out_")}, "norm", x)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = ll.unembed(x[:, -1:], table)
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int):
+    """Empty decode cache (the dry-run lowers decode_step against this)."""
+    B = batch_size
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.block == "xlstm":
+        every = cfg.slstm_every or (cfg.n_layers + 1)
+        n_super = max(1, cfg.n_layers // every)
+        n_m = every - 1
+        H, d = cfg.n_heads, cfg.d_model
+        return {
+            "mC": jnp.zeros((n_super, n_m, B, H, d // H, 2 * d // H),
+                            jnp.float32),
+            "mn": jnp.zeros((n_super, n_m, B, H, d // H), jnp.float32),
+            "sh": jnp.zeros((n_super, 3, B, d), jnp.float32),
+        }
+    T = min(cfg.window, cache_len) if cfg.window else cache_len
+    L = cfg.n_layers
+    cache = {
+        "k": jnp.zeros((L, B, T, KV, hd), dtype),
+        "v": jnp.zeros((L, B, T, KV, hd), dtype),
+        "slot_pos": jnp.full((L, B, T), -1, jnp.int32),
+    }
+    if cfg.block == "hymba":
+        cache["ssm_h"] = jnp.zeros((L, B, cfg.d_model, cfg.ssm_state),
+                                   jnp.float32)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    """One decode step. tokens (B,1) int32; pos scalar int32.
+
+    Returns (logits (B,1,V) f32, new cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    x = ll.embed(tokens, params["embed"], dtype)
+    if cfg.block == "xlstm":
+        x, cache = xlstm_apply(cfg, params, x, carry=cache, step=True)
+    else:
+        if cfg.rope == "mrope":
+            pos_arr = jnp.broadcast_to(pos, (B, 1, 3)).astype(jnp.int32)
+        else:
+            pos_arr = jnp.full((B, 1), pos, jnp.int32)
+
+        # fori_loop (not scan): the cache stays a single donated buffer
+        # updated in place per layer — scan would double-buffer the full
+        # multi-GB KV stack as xs/ys.
+        def body(i, st):
+            xx, c = st
+            p_l = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False),
+                params["blocks"])
+            cache_l = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False), c)
+            xx, cl, _ = block_apply(cfg, p_l, xx, pos_arr, cache_l=cache_l,
+                                    decode_pos=pos)
+            c = jax.tree.map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, i, 0),
+                c, cl)
+            return (xx, c)
+
+        x, cache = jax.lax.fori_loop(0, cfg.n_layers, body, (x, cache))
+    x = _norm(cfg, {k.replace("out_", ""): v for k, v in params.items()
+                    if k.startswith("out_")}, "norm", x)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return ll.unembed(x, table), cache

@@ -1,0 +1,178 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + recurrent sLSTM (arXiv:2405.04517).
+
+mLSTM keeps a matrix state C (B, H, dk, dv) and normalizer n (B, H, dk):
+
+    C_t = f_t C_{t−1} + i_t k_t v_tᵀ        n_t = f_t n_{t−1} + i_t k_t
+    y_t = (q_t · C_t) / max(|q_t · n_t|, 1)
+
+Training/prefill run the GLA-style chunkwise form: intra-chunk decay matrices
+in log space (all decay ratios ≤ 1 ⇒ no overflow), inter-chunk state carried
+by a scan. Decode is the one-step recurrence. Simplifications vs the paper
+(documented in DESIGN.md §7): the input gate uses sigmoid rather than
+exp-with-stabilizer, and the causal-conv front is omitted.
+
+sLSTM is the sequential scalar-memory cell with per-head recurrent mixing —
+inherently serial (the paper says as much), run as a ``lax.scan`` over time.
+xLSTM-1.3b interleaves one sLSTM per ``slstm_every`` mLSTM layers; the layer
+stack scans over superblocks so the mixed structure stays scan-shaped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------- mLSTM -------
+
+
+def _gates(x, params):
+    """x (B,S,d) -> i (B,S,H) in (0,1), log-f (B,S,H) ≤ 0."""
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, params["w_i"].astype(x.dtype))
+        + params["b_i"].astype(x.dtype))
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bsh", x, params["w_f"].astype(x.dtype))
+         + params["b_f"].astype(x.dtype)).astype(jnp.float32))
+    return i.astype(jnp.float32), lf
+
+
+def mlstm_chunkwise(q, k, v, i, lf, *, chunk: int, carry=None):
+    """q,k (B,S,H,dk); v (B,S,H,dv); i,lf (B,S,H) f32.
+
+    Returns y (B,S,H,dv) and carry (C (B,H,dk,dv) f32, n (B,H,dk) f32).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    scale = 1.0 / np.sqrt(dk)
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+
+    if carry is None:
+        carry = (jnp.zeros((B, H, dk, dv), jnp.float32),
+                 jnp.zeros((B, H, dk), jnp.float32))
+
+    def fold(st, inp):
+        C, n = st
+        qc, kc, vc, ic, lfc = inp          # (B,L,H,*) / (B,L,H)
+        L = qc.shape[1]
+        Lc = jnp.cumsum(lfc, axis=1)       # (B,L,H)
+        LcT = Lc.transpose(0, 2, 1)        # (B,H,L)
+        D = LcT[:, :, :, None] - LcT[:, :, None, :]   # log decay t<-s
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(tri, jnp.exp(jnp.where(tri, D, 0.0)), 0.0)
+        w = w * ic.transpose(0, 2, 1)[:, :, None, :]  # × i_s
+        scores = jnp.einsum("blhk,bmhk->bhlm", qc, kc,
+                            preferred_element_type=jnp.float32) * scale
+        a = w * scores                                 # (B,H,L,L)
+        y_intra = jnp.einsum("bhlm,bmhv->blhv", a.astype(vc.dtype), vc)
+        den_intra = a.sum(-1).transpose(0, 2, 1)       # (B,L,H)
+
+        eL = jnp.exp(Lc)                               # ≤ 1 decays
+        y_inter = jnp.einsum("blhk,bhkv->blhv", qc.astype(jnp.float32) * scale,
+                             C) * eL[..., None]
+        den_inter = jnp.einsum("blhk,bhk->blh", qc.astype(jnp.float32) * scale,
+                               n) * eL
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+        y = (y_intra.astype(jnp.float32) + y_inter) / den[..., None]
+
+        dec_end = jnp.exp(Lc[:, -1:, :] - Lc)          # (B,L,H), ≤ 1
+        ik = (ic * dec_end)[..., None] * kc.astype(jnp.float32)
+        f_end = jnp.exp(Lc[:, -1])                     # (B,H)
+        C = C * f_end[:, :, None, None] + jnp.einsum(
+            "blhk,blhv->bhkv", ik, vc.astype(jnp.float32))
+        n = n * f_end[:, :, None] + ik.sum(axis=1)     # (B,H,dk)
+        return (C, n), y.astype(v.dtype)
+
+    def rs(x):
+        return x.reshape(B, n_chunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    (C, n), ys = jax.lax.scan(fold, carry, (rs(q), rs(k), rs(v), rs(i), rs(lf)))
+    return ys.swapaxes(0, 1).reshape(B, S, H, dv), (C, n)
+
+
+def mlstm_step(q, k, v, i, lf, carry):
+    """Single decode step. q,k (B,H,dk); v (B,H,dv); i,lf (B,H)."""
+    C, n = carry
+    dk = q.shape[-1]
+    scale = 1.0 / np.sqrt(dk)
+    f = jnp.exp(lf)[..., None]
+    C = C * f[..., None] + (i[..., None] * k.astype(jnp.float32))[..., None] \
+        * v.astype(jnp.float32)[:, :, None, :]
+    n = n * f + i[..., None] * k.astype(jnp.float32)
+    qs = q.astype(jnp.float32) * scale
+    y = jnp.einsum("bhk,bhkv->bhv", qs, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)), 1.0)
+    return (y / den[..., None]).astype(v.dtype), (C, n)
+
+
+def mlstm_block(x, params, *, n_heads: int, chunk: int, carry=None,
+                step: bool = False):
+    """Full mLSTM residual block body (pre-norm residual handled by caller).
+
+    x (B,S,d). proj-factor 2: e = 2d; v dim e/H, qk dim d/H.
+    """
+    B, S, d = x.shape
+    e = params["w_up"].shape[1] // 2
+    H = n_heads
+    dv, dqk = e // H, d // H
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(x.dtype))
+    u, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ek->bsk", u, params["w_q"].astype(x.dtype)) \
+        .reshape(B, S, H, dqk)
+    k = jnp.einsum("bse,ek->bsk", u, params["w_k"].astype(x.dtype)) \
+        .reshape(B, S, H, dqk)
+    v = u.reshape(B, S, H, dv)
+    i, lf = _gates(x, params)
+    if step:
+        y, carry = mlstm_step(q[:, 0], k[:, 0], v[:, 0], i[:, 0], lf[:, 0],
+                              carry)
+        y = y[:, None]
+    else:
+        y, carry = mlstm_chunkwise(q, k, v, i, lf, chunk=chunk, carry=carry)
+    y = y.reshape(B, S, e) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(x.dtype)), carry
+
+
+# ------------------------------------------------------------- sLSTM -------
+
+
+def slstm_block(x, params, *, n_heads: int, carry=None, step: bool = False):
+    """Sequential sLSTM with per-head recurrent mixing.
+
+    x (B,S,d). carry = (h, c, n) each (B, d) f32.
+    """
+    B, S, d = x.shape
+    H = n_heads
+    dh = d // H
+    if carry is None:
+        carry = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3))
+
+    wx = params["w_x"].astype(x.dtype)       # (d, 4d)
+    r = params["r"].astype(jnp.float32)      # (H, dh, 4dh) recurrent, per head
+    b = params["b"].astype(jnp.float32)      # (4d,)
+    gx_all = jnp.einsum("bsd,de->bse", x, wx).astype(jnp.float32)  # (B,S,4d)
+
+    def cell(st, gx):
+        h, c, n = st
+        hr = jnp.einsum("bhd,hde->bhe", h.reshape(B, H, dh), r).reshape(B, 4 * d)
+        g = gx + hr + b
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        i = jax.nn.sigmoid(gi)
+        f = jax.nn.sigmoid(gf)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(n, 1.0)
+        return (h, c, n), h
+
+    if step:
+        carry, h = cell(carry, gx_all[:, 0])
+        ys = h[:, None]
+    else:
+        carry, hs = jax.lax.scan(cell, carry, gx_all.swapaxes(0, 1))
+        ys = hs.swapaxes(0, 1)
+    y = jnp.einsum("bsd,de->bse", ys.astype(x.dtype),
+                   params["w_out"].astype(x.dtype))
+    return y, carry

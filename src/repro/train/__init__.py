@@ -1,0 +1,1 @@
+"""Training substrate: optimizer, schedules, trainer with checkpoint/restart."""

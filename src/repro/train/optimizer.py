@@ -1,0 +1,82 @@
+"""AdamW (hand-rolled, optax-free) + global-norm clipping + cosine schedule.
+
+Optimizer state mirrors the parameter pytree, so its sharding specs follow
+the parameters (data-FSDP × model-TP) — the ZeRO-3-equivalent layout used by
+the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.zeros_like, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        p2 = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return p2, m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(new_m, new_v, step), \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,117 @@
+"""Training loop: jit'd step (donated state), checkpoint/restart, microbatch
+gradient accumulation, and straggler-aware step timing.
+
+The step function is pure; everything operational (checkpoint cadence,
+restart, timing watchdog) lives out here so a node failure loses at most
+``ckpt_every`` steps. Straggler mitigation at framework level: step-time EWMA
+plus a slow-step counter — the launcher (launch/train.py) reads it and can
+trigger an elastic reshard (distributed/elastic.py) when a host degrades.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed import checkpoint as ckpt
+from ..models import model as model_mod
+from . import optimizer as opt_mod
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_mod.OptState
+
+
+def make_train_step(cfg: ArchConfig, ocfg: opt_mod.AdamWConfig,
+                    microbatch: int = 0) -> Callable:
+    """Returns jit-able ``step(state, batch) -> (state, metrics)``.
+
+    ``microbatch > 0`` splits the batch into that many accumulation chunks
+    (sequential grad accumulation — the standard memory/throughput knob).
+    """
+
+    def loss(params, batch):
+        return model_mod.loss_fn(cfg, params, batch)
+
+    def step(state: TrainState, batch):
+        if microbatch and microbatch > 1:
+            def split(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, b):
+                g, l = carry
+                (li, _), gi = jax.value_and_grad(loss, has_aux=True)(
+                    state.params, b)
+                return (jax.tree.map(jnp.add, g, gi), l + li), None
+
+            zero = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, lsum), _ = jax.lax.scan(acc_fn, (zero, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            lval = lsum / microbatch
+            metrics = {}
+        else:
+            (lval, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(state.params, batch)
+        params, opt_state, om = opt_mod.apply(ocfg, state.params, grads,
+                                              state.opt)
+        m = {"loss": lval, **{k: v for k, v in metrics.items()}, **om}
+        return TrainState(params, opt_state), m
+
+    return step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0   # step slower than EWMA×f counts as slow
+
+
+def train_loop(cfg: ArchConfig, tcfg: TrainerConfig,
+               ocfg: opt_mod.AdamWConfig, batch_iter, *,
+               state: Optional[TrainState] = None, seed: int = 0,
+               step_fn=None, log=print):
+    """Run/resume a training job; returns (state, history)."""
+    if state is None:
+        params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+        state = TrainState(params, opt_mod.init(params))
+    start_step = 0
+    if tcfg.ckpt_dir and ckpt.latest_step(tcfg.ckpt_dir) is not None:
+        state, meta = ckpt.restore(tcfg.ckpt_dir, state)
+        start_step = meta["step"]
+        log(f"[trainer] resumed from step {start_step}")
+    step_fn = step_fn or jax.jit(make_train_step(cfg, ocfg), donate_argnums=0)
+
+    history = []
+    ewma = None
+    slow_steps = 0
+    for i in range(start_step, tcfg.total_steps):
+        batch = next(batch_iter)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.perf_counter() - t0
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        if dt > tcfg.straggler_factor * ewma and i > start_step + 3:
+            slow_steps += 1  # surfaced to the launcher for elastic action
+        metrics.update(step=i + 1, dt=dt, slow_steps=slow_steps)
+        history.append(metrics)
+        if (i + 1) % tcfg.log_every == 0:
+            log(f"[trainer] step {i+1} loss={metrics['loss']:.4f} "
+                f"dt={dt*1e3:.1f}ms")
+        if tcfg.ckpt_dir and (i + 1) % tcfg.ckpt_every == 0:
+            ckpt.save(tcfg.ckpt_dir, i + 1, state, keep=tcfg.keep,
+                      meta={"slow_steps": slow_steps})
+    if tcfg.ckpt_dir:
+        ckpt.save(tcfg.ckpt_dir, tcfg.total_steps, state, keep=tcfg.keep)
+    return state, history

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run alone uses 512 placeholder
+# devices, set inside launch/dryrun.py before any jax import — never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,43 @@
+import numpy as np
+import pytest
+
+from repro.baselines import dclust, fdbscan, gdbscan
+from repro.baselines.brute import reference_dbscan
+from repro.baselines.gdbscan import GDBSCANMemoryError
+from repro.core import labels as L
+from repro.data import synth
+
+
+@pytest.mark.parametrize("runner", [
+    lambda p, e, m: fdbscan.run(p, e, m),
+    lambda p, e, m: fdbscan.run(p, e, m, early_exit=True),
+    lambda p, e, m: gdbscan.run(p, e, m),
+    lambda p, e, m: dclust.run(p, e, m),
+], ids=["fdbscan", "fdbscan-early-exit", "gdbscan", "dclust"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_baseline_equivalence(runner, seed):
+    pts = synth.blobs(320, k=3, seed=seed)
+    eps, minpts = 0.08, 6
+    ref_labels, ref_core = reference_dbscan(pts, eps, minpts)
+    res = runner(pts, eps, minpts)
+    assert np.array_equal(np.asarray(res.core), ref_core)
+    assert L.equivalent(np.asarray(res.labels), ref_labels, ref_core,
+                        points=pts, eps=eps)
+
+
+def test_gdbscan_oom_guard():
+    # faithful to the paper: G-DBSCAN cannot run beyond ~100K points
+    pts = np.zeros((200, 3), np.float32)
+    with pytest.raises(GDBSCANMemoryError):
+        gdbscan.run(pts, 0.1, 5, max_n=100)
+
+
+def test_dclust_needs_more_rounds_on_chains():
+    # chain-shaped data: label propagation is diameter-bound, union-find is
+    # O(log n) — the algorithmic gap the paper's baseline comparison shows.
+    pts = synth.load("roadnet2d", 600, seed=3)
+    eps, minpts = 0.03, 3
+    from repro.core.dbscan import dbscan
+    rt = dbscan(pts, eps, minpts, engine="grid")
+    dc = dclust.run(pts, eps, minpts)
+    assert dc.n_rounds >= rt.n_rounds

@@ -1,0 +1,112 @@
+"""Per-arch smoke tests (reduced configs, CPU): one forward/train step with
+shape + finiteness asserts, and prefill→decode consistency vs full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL, SHAPES, shape_applicable
+from repro.models import model as M
+from repro.train import optimizer as opt_mod
+from repro.train.trainer import TrainState, make_train_step
+
+ARCHS = sorted(ALL)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(name, key):
+    cfg = ALL[name].reduced()
+    params = M.init_params(cfg, key)
+    B, S = 2, 64
+    batch = M.synth_batch(cfg, B, S, key)
+    logits, _, aux = M.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step(name, key):
+    cfg = ALL[name].reduced()
+    params = M.init_params(cfg, key)
+    state = TrainState(params, opt_mod.init(params))
+    step = jax.jit(make_train_step(cfg, opt_mod.AdamWConfig(lr=1e-3)))
+    batch = M.synth_batch(cfg, 2, 64, key)
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(state2.params)))
+    assert moved
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode_consistency(name, key):
+    cfg = ALL[name].reduced()
+    params = M.init_params(cfg, key)
+    B, S, PRE = 2, 64, 56
+    batch = M.synth_batch(cfg, B, S, key, train=False)
+    logits_full, _, _ = M.forward(cfg, params, batch)
+    pb = dict(batch, tokens=batch["tokens"][:, :PRE])
+    if "pos3" in pb:
+        pb["pos3"] = batch["pos3"][:, :PRE]
+    lg, cache = M.prefill(cfg, params, pb, cache_len=S)
+    # MoE capacity dropping differs between prefill and decode batch shapes
+    tol = 5e-2 if cfg.is_moe else 1e-4
+    assert float(jnp.abs(lg[:, -1] - logits_full[:, PRE - 1]).max()) < tol
+    for t in range(PRE, S):
+        tok = batch["tokens"][:, t:t + 1]
+        lg, cache = M.decode_step(cfg, params, cache, tok, jnp.int32(t))
+        err = float(jnp.abs(lg[:, 0] - logits_full[:, t]).max())
+        assert err < tol, (t, err)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_input_specs_cover_all_cells(name):
+    cfg = ALL[name]
+    for shape in SHAPES.values():
+        skip = shape_applicable(cfg, shape)
+        if skip:
+            assert shape.name == "long_500k"
+            continue
+        specs = M.input_specs(cfg, shape)
+        leaves = jax.tree.leaves(specs)
+        assert leaves, (name, shape.name)
+        for leaf in leaves:
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_long_500k_applicability_set():
+    runs = {n for n, c in ALL.items()
+            if shape_applicable(c, SHAPES["long_500k"]) is None}
+    assert runs == {"h2o-danube-1.8b", "hymba-1.5b", "xlstm-1.3b"}
+
+
+def test_param_counts_in_range():
+    # full-config parameter counts should be in the advertised ballpark
+    expect = {
+        "stablelm-12b": (9e9, 16e9),
+        "h2o-danube-1.8b": (1.4e9, 2.4e9),
+        "starcoder2-3b": (2.4e9, 4e9),
+        "qwen3-8b": (6.5e9, 10e9),
+        # the assigned 48L×64e×1408 config is 28B total (3.4B active);
+        # the hf card's "16B" counts its shared-expert/dense-layer variant
+        "moonshot-v1-16b-a3b": (13e9, 30e9),
+        "granite-moe-1b-a400m": (0.8e9, 1.8e9),
+        "qwen2-vl-72b": (60e9, 82e9),
+        "hymba-1.5b": (1.0e9, 2.2e9),
+        # backbone-only (conv stem stubbed per assignment)
+        "whisper-large-v3": (0.9e9, 2.2e9),
+        "xlstm-1.3b": (0.9e9, 2.0e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = ALL[name].param_count()
+        assert lo <= n <= hi, (name, n)

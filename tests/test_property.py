@@ -1,0 +1,102 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines.brute import reference_dbscan
+from repro.core import labels as L
+from repro.core.dbscan import dbscan
+from repro.data import synth
+
+
+def _pts(seed, n=160, k=3):
+    return synth.blobs(n, k=k, seed=seed)
+
+
+def _canon_partition(labels):
+    labels = np.asarray(labels)
+    out = np.full(len(labels), -1)
+    m = {}
+    for i, v in enumerate(labels):
+        if v == -1:
+            continue
+        out[i] = m.setdefault(v, len(m))
+    return out
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.05, 0.08, 0.12]),
+       st.integers(3, 10))
+def test_matches_reference(seed, eps, minpts):
+    pts = _pts(seed)
+    ref_labels, ref_core = reference_dbscan(pts, eps, minpts)
+    res = dbscan(pts, eps, minpts, engine="grid")
+    assert np.array_equal(np.asarray(res.core), ref_core)
+    assert L.equivalent(np.asarray(res.labels), ref_labels, ref_core,
+                        points=pts, eps=eps)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_permutation_invariance(seed):
+    pts = _pts(seed)
+    eps, minpts = 0.08, 5
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(len(pts))
+    a = dbscan(pts, eps, minpts, engine="grid")
+    b = dbscan(pts[perm], eps, minpts, engine="grid")
+    # cluster partition identical after undoing the permutation
+    la = _canon_partition(np.asarray(a.labels))[perm]
+    lb = _canon_partition(np.asarray(b.labels))
+    assert np.array_equal(la != -1, lb != -1)
+    core_a = np.asarray(a.core)[perm]
+    assert np.array_equal(core_a, np.asarray(b.core))
+    # same-cluster relation preserved on core points
+    ca, cb = la[core_a], lb[core_a]
+    assert np.array_equal(_canon_partition(ca), _canon_partition(cb))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_translation_invariance(seed):
+    pts = _pts(seed)
+    eps, minpts = 0.08, 5
+    shift = np.array([13.7, -4.2, 0.0], np.float32)
+    a = dbscan(pts, eps, minpts, engine="grid")
+    b = dbscan(pts + shift, eps, minpts, engine="grid")
+    assert np.array_equal(np.asarray(a.core), np.asarray(b.core))
+    assert np.array_equal(_canon_partition(np.asarray(a.labels)),
+                          _canon_partition(np.asarray(b.labels)))
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000))
+def test_eps_monotone_noise(seed):
+    # noise(ε₁) ⊇ noise(ε₂) for ε₁ < ε₂
+    pts = _pts(seed)
+    small = dbscan(pts, 0.05, 5, engine="grid")
+    big = dbscan(pts, 0.10, 5, engine="grid")
+    noise_small = np.asarray(small.labels) == -1
+    noise_big = np.asarray(big.labels) == -1
+    assert (noise_small | ~noise_big).all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000))
+def test_minpts_monotone_core(seed):
+    # core(minPts₁) ⊇ core(minPts₂) for minPts₁ < minPts₂
+    pts = _pts(seed)
+    lo = dbscan(pts, 0.08, 4, engine="grid")
+    hi = dbscan(pts, 0.08, 9, engine="grid")
+    assert (np.asarray(lo.core) | ~np.asarray(hi.core)).all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000))
+def test_counts_symmetry(seed):
+    # i within ε of j ⇔ j within ε of i ⇒ count parity with the oracle
+    pts = _pts(seed, n=120)
+    res = dbscan(pts, 0.08, 5, engine="grid")
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(np.asarray(res.counts),
+                                  (d2 <= 0.08 * 0.08).sum(1))

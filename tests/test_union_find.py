@@ -1,0 +1,85 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.union_find import (connected_components, init_parents,
+                                   pointer_jump, union_edges)
+
+
+def _py_components(n, edges):
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in edges:
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    # canonical min-root labels
+    return np.array([min_root(parent, i) for i in range(n)])
+
+
+def min_root(parent, i):
+    while parent[i] != i:
+        i = parent[i]
+    return i
+
+
+def _canon(labels):
+    # same-component relation, order-independent canonical form
+    labels = np.asarray(labels)
+    _, first = np.unique(labels, return_index=True)
+    m = {labels[i]: int(i) for i in first}
+    return np.array([m[v] for v in labels])
+
+
+def test_pointer_jump_identity():
+    p = init_parents(7)
+    assert np.array_equal(np.asarray(pointer_jump(p)), np.arange(7))
+
+
+def test_pointer_jump_chain():
+    p = jnp.asarray([0, 0, 1, 2, 3, 4], jnp.int32)
+    assert np.array_equal(np.asarray(pointer_jump(p)), np.zeros(6))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("n,m", [(10, 5), (50, 80), (200, 150), (128, 1)])
+def test_union_edges_random(seed, n, m):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m).astype(np.int32)
+    v = rng.integers(0, n, m).astype(np.int32)
+    roots = connected_components(n, jnp.asarray(u), jnp.asarray(v))
+    expect = _py_components(n, list(zip(u.tolist(), v.tolist())))
+    assert np.array_equal(_canon(np.asarray(roots)), _canon(expect))
+
+
+def test_union_edges_masked():
+    n = 8
+    u = jnp.asarray([0, 2, 4], jnp.int32)
+    v = jnp.asarray([1, 3, 5], jnp.int32)
+    valid = jnp.asarray([True, False, True])
+    p = union_edges(init_parents(n), u, v, valid=valid)
+    roots = np.asarray(pointer_jump(p))
+    assert roots[0] == roots[1]
+    assert roots[2] != roots[3]
+    assert roots[4] == roots[5]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 64), st.integers(0, 128))
+def test_union_edges_property(seed, n, m):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m).astype(np.int32)
+    v = rng.integers(0, n, m).astype(np.int32)
+    roots = np.asarray(connected_components(n, jnp.asarray(u), jnp.asarray(v)))
+    expect = _py_components(n, list(zip(u.tolist(), v.tolist())))
+    assert np.array_equal(_canon(roots), _canon(expect))
+    # roots are fixpoints and component-minimal
+    assert np.array_equal(roots[roots], roots)
+    assert (roots <= np.arange(n)).all()
