@@ -34,17 +34,32 @@ def _leaves(x):
     return [l for l in jax.tree.leaves(x) if hasattr(l, "block_until_ready")]
 
 
+# When set (by benchmarks.run --json), every Reporter.row also appends a
+# machine-readable record here; run.py dumps the list to BENCH_sweep.json so
+# the perf trajectory is diffable across PRs.
+JSON_SINK: list | None = None
+
+
 class Reporter:
     def __init__(self, name: str):
         self.name = name
         self.rows: List[str] = []
 
-    def row(self, case: str, seconds: float, derived: str = ""):
+    def row(self, case: str, seconds: float, derived: str = "",
+            engine: str = ""):
         line = f"{self.name},{case},{seconds:.6f},{derived}"
         print(line, flush=True)
         self.rows.append(line)
+        if JSON_SINK is not None:
+            JSON_SINK.append({"name": self.name, "case": case,
+                              "seconds": seconds, "derived": derived,
+                              "engine": engine})
 
     def note(self, case: str, text: str):
         line = f"{self.name},{case},NA,{text}"
         print(line, flush=True)
         self.rows.append(line)
+        if JSON_SINK is not None:
+            JSON_SINK.append({"name": self.name, "case": case,
+                              "seconds": None, "derived": text,
+                              "engine": ""})

@@ -1,13 +1,17 @@
 """Benchmark entry point: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6_size]
+                                            [--json [PATH]]
 
 Prints ``name,case,seconds,derived`` CSV (plus the roofline table when
-dry-run results exist).
+dry-run results exist). With ``--json`` the same rows are also written as
+``BENCH_sweep.json`` (per-case name/seconds/derived/engine), so the perf
+trajectory is machine-readable and diffable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -20,9 +24,16 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", nargs="?", const="BENCH_sweep.json",
+                    default=None, metavar="PATH",
+                    help="also write per-case records to PATH "
+                         "(default BENCH_sweep.json)")
     args = ap.parse_args(argv)
 
-    from . import figures
+    from . import common, figures
+
+    if args.json:
+        common.JSON_SINK = []
 
     print("name,case,seconds,derived")
     t0 = time.time()
@@ -35,6 +46,14 @@ def main(argv=None):
             print(f"{fig.__name__},ERROR,NA,{type(e).__name__}: {e}",
                   flush=True)
     print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"total_seconds": time.time() - t0,
+                       "full": args.full,
+                       "rows": common.JSON_SINK}, f, indent=2)
+        print(f"# wrote {len(common.JSON_SINK)} records to {args.json}",
+              flush=True)
 
     if os.path.isdir("results/dryrun") and not args.only:
         print("\n# Roofline (single-pod, from dry-run):")

@@ -24,8 +24,9 @@ print("== structure build (the paper's 'BVH build' phase)")
 t0 = time.perf_counter()
 eng = nb.make_engine(points, eps, engine="grid")
 t_build = time.perf_counter() - t0
-print(f"   grid build: {t_build:.3f}s "
-      f"(table={eng.meta.table_size}, capacity={eng.meta.capacity})")
+print(f"   csr grid build: {t_build:.3f}s "
+      f"(tiles={eng.meta.n_tiles}, slab={eng.meta.slab}, "
+      f"sorted rows={eng.meta.n_cand})")
 
 print("== clustering (stage 1 + stage 2 + border)")
 t0 = time.perf_counter()

@@ -17,8 +17,16 @@ Two stages over one fused sweep primitive (DESIGN.md §2):
             core-neighbor root (deterministic refinement of the paper's
             race-winner semantics); no core neighbor ⇒ noise (−1).
 
-Labels are component-min core indices; ``labels.compact_labels`` maps them to
-0..k−1 for reporting.
+Round drivers (DESIGN.md §5): by default the hooking rounds run inside a
+``jax.lax.while_loop`` — one device program for all of stage 2, no host
+round-trip per round. For the CSR grid engine the loop additionally runs in
+*sorted layout* (payloads stay cell-sorted across rounds; original-order
+labels are reconstructed once at the end). ``hook_loop="host"`` opts back
+into the per-round Python loop — the distributed driver uses it as its
+checkpoint boundary.
+
+Labels are component-min core indices (identical across engines and
+drivers); ``labels.compact_labels`` maps them to 0..k−1 for reporting.
 """
 from __future__ import annotations
 
@@ -41,16 +49,22 @@ class DBSCANResult(NamedTuple):
     n_rounds: int            # stage-2 hooking rounds executed
 
 
+def _hook_step(root, m, core):
+    """One stage-2 hooking step (shared by all three round drivers):
+    hook each core root onto the min core-neighbor root and recompress."""
+    tgt = jnp.minimum(m, root)               # m includes own root for core pts
+    p2 = hook_min(root, root, tgt, valid=core)
+    p2 = pointer_jump(p2)
+    return p2, jnp.any(p2 != root)
+
+
 @functools.lru_cache(maxsize=64)
 def _round_fn(sweep):
     @jax.jit
     def rnd(state, parent, core):
         root = pointer_jump(parent)
         _, m = sweep(state, core, root)
-        tgt = jnp.minimum(m, root)           # m includes own root for core pts
-        p2 = hook_min(root, root, tgt, valid=core)
-        p2 = pointer_jump(p2)
-        return p2, jnp.any(p2 != root)
+        return _hook_step(root, m, core)
     return rnd
 
 
@@ -77,22 +91,127 @@ def _finalize_fn(sweep):
     return finalize
 
 
+@functools.lru_cache(maxsize=64)
+def _device_loop_fn(sweep, max_rounds: int):
+    """Stage-2 hooking as one ``lax.while_loop`` device program — no host
+    sync / ``bool(changed)`` round-trip per round (DESIGN.md §5)."""
+    @jax.jit
+    def run(state, core):
+        n = core.shape[0]
+        parent0 = jnp.arange(n, dtype=jnp.int32)
+
+        def cond(carry):
+            _, changed, it = carry
+            return jnp.logical_and(changed, it < max_rounds)
+
+        def body(carry):
+            parent, _, it = carry
+            root = pointer_jump(parent)
+            _, m = sweep(state, core, root)
+            p2, changed = _hook_step(root, m, core)
+            return p2, changed, it + 1
+
+        parent, _, n_rounds = jax.lax.while_loop(
+            cond, body, (parent0, jnp.bool_(True), jnp.int32(0)))
+        return parent, n_rounds
+    return run
+
+
+@functools.lru_cache(maxsize=64)
+def _csr_stage1_fn(sweep_sorted):
+    @jax.jit
+    def stage1(state, order):
+        n = order.shape[0]
+        counts_s, _ = sweep_sorted(state, jnp.full((n,), INT_MAX, jnp.int32))
+        return jnp.zeros((n,), jnp.int32).at[order].set(counts_s)
+    return stage1
+
+
+@functools.lru_cache(maxsize=64)
+def _csr_driver_fn(sweep_sorted, max_rounds: int):
+    """Sorted-layout stage 2 + border attachment for the CSR engine.
+
+    The union-find runs over *sorted* point ids, so the sweep payloads never
+    leave sorted layout across rounds — no per-round gather at all. Original
+    label ids (component-min original core index, identical to the brute
+    engine's) are reconstructed once at the end via a segment-min over
+    ``order`` (DESIGN.md §5).
+    """
+    @jax.jit
+    def run(state, order, core):
+        n = order.shape[0]
+        core_s = core[order]
+        parent0 = jnp.arange(n, dtype=jnp.int32)
+
+        def cond(carry):
+            _, changed, it = carry
+            return jnp.logical_and(changed, it < max_rounds)
+
+        def body(carry):
+            parent, _, it = carry
+            root = pointer_jump(parent)
+            croot = jnp.where(core_s, root, INT_MAX)
+            _, m = sweep_sorted(state, croot)
+            p2, changed = _hook_step(root, m, core_s)
+            return p2, changed, it + 1
+
+        parent, _, n_rounds = jax.lax.while_loop(
+            cond, body, (parent0, jnp.bool_(True), jnp.int32(0)))
+        root = pointer_jump(parent)
+
+        # Brute-identical label ids: min *original* index over the core
+        # members of each sorted-space component.
+        comp_min = jnp.full((n,), INT_MAX, jnp.int32).at[root].min(
+            jnp.where(core_s, order, INT_MAX))
+        core_label = comp_min[root]
+        croot = jnp.where(core_s, core_label, INT_MAX)
+        _, m = sweep_sorted(state, croot)         # border attachment sweep
+        labels_s = jnp.where(core_s, core_label,
+                             jnp.where(m != INT_MAX, m, -1)).astype(jnp.int32)
+        labels = jnp.full((n,), -1, jnp.int32).at[order].set(labels_s)
+        return labels, n_rounds
+    return run
+
+
 def dbscan(points, eps: float, min_pts: int, *, engine: str = "grid",
            backend: str | None = None, chunk: int = 2048,
            max_rounds: int = 64, precomputed_counts=None,
-           eng: nb.Engine | None = None) -> DBSCANResult:
+           eng: nb.Engine | None = None,
+           hook_loop: str = "device") -> DBSCANResult:
     """Cluster ``points`` (n, 3) — 2D data carries z = 0, as in the paper.
 
     ``precomputed_counts`` implements the paper's §VI-B re-run use case:
     saved stage-1 counts let a minPts re-run skip core identification
     entirely. ``eng`` lets callers reuse a built structure across ε-runs of
-    the same dataset (build amortization, paper §V-D).
+    the same dataset (build amortization, paper §V-D). ``chunk`` tiles the
+    brute/grid-hash sweeps; the CSR engine's tile size is part of its plan
+    (build with ``make_engine(spec=plan_csr_grid(..., chunk=...))``).
+
+    ``hook_loop`` selects the stage-2 round driver (DESIGN.md §5):
+    ``"device"`` (default) runs all hooking rounds in one
+    ``jax.lax.while_loop`` program; ``"host"`` keeps the per-round Python
+    loop — a natural checkpoint boundary, which is why the distributed
+    driver opts into it at its restart granularity.
     """
+    if hook_loop not in ("device", "host"):
+        raise ValueError(f"unknown hook_loop {hook_loop!r}")
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
     if eng is None:
         eng = nb.make_engine(points, eps, engine=engine, backend=backend,
                              chunk=chunk)
+
+    # --- CSR fast path: payloads stay in sorted layout across rounds. ---
+    if eng.sweep_sorted is not None and hook_loop == "device":
+        if precomputed_counts is not None:
+            counts = jnp.asarray(precomputed_counts, jnp.int32)
+        else:
+            counts = _csr_stage1_fn(eng.sweep_sorted)(eng.state, eng.order)
+        core = counts >= jnp.int32(min_pts)
+        labels, n_rounds = _csr_driver_fn(eng.sweep_sorted, max_rounds)(
+            eng.state, eng.order, core)
+        return DBSCANResult(labels=labels, core=core, counts=counts,
+                            n_rounds=int(n_rounds))
 
     # Stage 1 — core identification.
     if precomputed_counts is not None:
@@ -101,16 +220,22 @@ def dbscan(points, eps: float, min_pts: int, *, engine: str = "grid",
         counts = _stage1_fn(eng.sweep)(eng.state, n)
     core = counts >= jnp.int32(min_pts)
 
-    # Stage 2 — hooking rounds (python loop: host-visible round count, and a
-    # natural checkpoint boundary for the distributed driver).
-    parent = jnp.arange(n, dtype=jnp.int32)
-    rnd = _round_fn(eng.sweep)
-    n_rounds = 0
-    for _ in range(max_rounds):
-        parent, changed = rnd(eng.state, parent, core)
-        n_rounds += 1
-        if not bool(changed):
-            break
+    # Stage 2 — hooking rounds.
+    if hook_loop == "device":
+        parent, n_rounds_dev = _device_loop_fn(eng.sweep, max_rounds)(
+            eng.state, core)
+        n_rounds = int(n_rounds_dev)
+    else:
+        # Host loop: host-visible round count and a natural checkpoint
+        # boundary for the distributed driver.
+        parent = jnp.arange(n, dtype=jnp.int32)
+        rnd = _round_fn(eng.sweep)
+        n_rounds = 0
+        for _ in range(max_rounds):
+            parent, changed = rnd(eng.state, parent, core)
+            n_rounds += 1
+            if not bool(changed):
+                break
 
     # Border attachment + final labels.
     labels = _finalize_fn(eng.sweep)(eng.state, parent, core)

@@ -19,11 +19,18 @@ structure-prune / exact-refine split as the paper's Algorithm 2 line 6.
 (dataset, ε): table size H (pow2) and bucket capacity C = max occupancy, so
 the jitted build can never drop a point. The (H, C) padded buffer is the
 price of static shapes; plan warns when skew makes it pathological.
+
+This module also provides the **cell-sorted CSR layout** (DESIGN.md §3) that
+replaced the (H, C) table as the default engine: points reordered by Morton
+cell code, with per-tile contiguous candidate slabs sized by actual local
+occupancy — O(n) memory and O(n·window) work instead of O(H·C) and
+O(n·27·C_max). See ``plan_csr_grid`` / ``build_csr_grid``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -108,11 +115,19 @@ def plan_grid(points_np: np.ndarray, eps: float, *, dims: int = 3,
     cap = max(capacity_round, ((cap + capacity_round - 1) // capacity_round)
               * capacity_round)
     if table_size * cap > 64 * max(n, 1):
-        # Pathological skew: one bucket holds a large fraction of the data.
-        # That is irreducible candidate work for exact DBSCAN (the paper's
-        # DenseBox-excluded regime); we keep going but the caller can read
-        # the footprint from the spec.
-        pass
+        # Pathological skew: one bucket holds a large fraction of the data,
+        # and every query pays its capacity. Irreducible candidate work for
+        # exact DBSCAN (the paper's DenseBox-excluded regime) — we keep
+        # going, but the caller should know the footprint and consider the
+        # CSR engine (engine="grid"), whose memory stays O(n).
+        warnings.warn(
+            f"plan_grid: skewed occupancy — max bucket holds {occ.max()} of "
+            f"{n} points, so the (H, C) table is ({table_size}, {cap}) = "
+            f"{table_size * cap} slots ({table_size * cap / max(n, 1):.1f}x "
+            f"the point count) and every query sweeps "
+            f"{9 if dims == 2 else 27} x {cap} candidates; the cell-sorted "
+            "CSR engine (engine='grid') avoids this blow-up",
+            RuntimeWarning, stacklevel=2)
     return dataclasses.replace(spec, capacity=cap)
 
 
@@ -137,6 +152,181 @@ def build_grid(points: jnp.ndarray, spec: GridSpec) -> Grid:
     gvalid = gvalid.at[bsorted, rank].set(True, mode="drop")
     return Grid(points=gpoints, index=gindex, valid=gvalid, order=order,
                 bucket=bucket)
+
+
+# ---------------------------------------------------------------------------
+# Cell-sorted CSR layout (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGridSpec:
+    """Static plan for the cell-sorted CSR engine. Hashable → jit-static.
+
+    ``side`` may exceed ε when the extent saturates the Morton bit budget
+    (coarser cells keep the ±1 window exact since side ≥ ε). The top cell
+    index per axis is reserved for padding, so padded candidates can never
+    enter a real query's window.
+    """
+    side: float           # cell side (≥ ε)
+    origin: tuple         # (3,) domain min
+    dims: int             # 2 or 3
+    bits: int             # Morton bits per axis (15 for 2D, 10 for 3D)
+    chunk: int            # queries per sweep tile
+    block_k: int          # candidate block granularity (slab quantum)
+    n: int                # real point count
+    n_tiles: int          # T = ceil(n / chunk)
+    slab: int             # per-tile slab capacity (elements, mult. block_k)
+    n_cand: int           # padded sorted-candidate length (mult. block_k)
+
+    @property
+    def n_offsets(self) -> int:
+        return 9 if self.dims == 2 else 27
+
+    @property
+    def max_real_cell(self) -> int:
+        return (1 << self.bits) - 3
+
+
+class CSRGrid(NamedTuple):
+    """Device-side CSR grid buffers (a pytree). All layouts are *sorted*:
+    position s holds the point with the s-th smallest Morton cell code."""
+    order: jnp.ndarray    # (n,) int32: sorted position -> original index
+    q_sorted: jnp.ndarray  # (T*chunk, 3) f32 sorted queries, edge-padded
+    cands: jnp.ndarray    # (3, n_cand) f32 planar sorted candidates, +BIG pad
+    starts: jnp.ndarray   # (T,) int32 slab starts (elements, mult. block_k)
+    nblk: jnp.ndarray     # (T,) int32 live blocks per tile slab
+    overflow: jnp.ndarray  # () bool: a tile's window outgrew the planned slab
+
+
+def csr_cells(points: jnp.ndarray, side: float, origin: tuple, dims: int,
+              bits: int) -> jnp.ndarray:
+    """Quantized cell coords, clipped to the real-cell range
+    [0, 2^bits - 3]. The two top indices stay free: 2^bits - 2 for clipped
+    window neighbors, 2^bits - 1 reserved for padding sentinels."""
+    inv = 1.0 / side
+    org = jnp.asarray(origin, points.dtype)
+    c = jnp.floor((points - org) * inv).astype(jnp.int32)
+    c = jnp.clip(c, 0, (1 << bits) - 3)
+    if dims == 2:
+        c = c.at[:, 2].set(0)
+    return c
+
+
+def _csr_window_bounds(sorted_codes, sorted_cells, dims: int, bits: int):
+    """Per sorted query: [lo, hi) positions in the sorted array covering the
+    occupied runs of all 9/27 window cells. Empty window cells are excluded
+    (their searchsorted insertion point would needlessly widen the slab)."""
+    n = sorted_codes.shape[0]
+    from ..kernels import ref as _kref
+    rng = (-1, 0, 1)
+    offs = [(dx, dy, dz) for dx in rng for dy in rng
+            for dz in (rng if dims == 3 else (0,))]
+    lo = jnp.full((n,), n, jnp.int32)
+    hi = jnp.zeros((n,), jnp.int32)
+    cell_cap = (1 << bits) - 2
+    for off in offs:
+        nb = jnp.clip(sorted_cells + jnp.asarray(off, jnp.int32), 0, cell_cap)
+        if dims == 2:
+            nb = nb.at[:, 2].set(0)
+        code = _kref.morton_encode_ref(nb, dims=dims)
+        left = jnp.searchsorted(sorted_codes, code, side="left").astype(
+            jnp.int32)
+        right = jnp.searchsorted(sorted_codes, code, side="right").astype(
+            jnp.int32)
+        occupied = right > left
+        lo = jnp.minimum(lo, jnp.where(occupied, left, n))
+        hi = jnp.maximum(hi, jnp.where(occupied, right, 0))
+    return lo, hi
+
+
+def _csr_layout(points, side: float, origin: tuple, dims: int, bits: int):
+    """Shared sort-by-cell pass: identical arithmetic runs at plan time
+    (host) and build time (device), so the plan's slab capacity is valid for
+    the build — the CSR analogue of plan_grid's exactness contract."""
+    from ..kernels import ref as _kref
+    cells = csr_cells(points, side, origin, dims, bits)
+    codes = _kref.morton_encode_ref(cells, dims=dims)
+    order = jnp.argsort(codes).astype(jnp.int32)
+    sorted_codes = codes[order]
+    lo, hi = _csr_window_bounds(sorted_codes, cells[order], dims, bits)
+    return order, points[order], lo, hi
+
+
+def tile_slabs(lo, hi, n: int, *, n_tiles: int, chunk: int, block_k: int,
+               slab: int, n_cand: int):
+    """Reduce per-query window bounds to per-tile slab (start, nblk).
+
+    Queries beyond ``n`` are edge-repeated; callers with interleaved padding
+    (the distributed engine) pre-mask pad entries to (lo=n, hi=0) so they
+    drop out of the tile min/max. ``overflow`` fires when a tile's window
+    outgrows the static ``slab`` capacity.
+    """
+    bk = block_k
+    pad_idx = jnp.minimum(jnp.arange(n_tiles * chunk, dtype=jnp.int32),
+                          max(n - 1, 0))
+    lo_t = lo[pad_idx].reshape(n_tiles, chunk).min(axis=1)
+    hi_t = hi[pad_idx].reshape(n_tiles, chunk).max(axis=1)
+    start = jnp.clip((lo_t // bk) * bk, 0, n_cand - slab)
+    need = hi_t - start
+    overflow = jnp.any(need > slab)
+    nblk = jnp.clip((need + bk - 1) // bk, 0, slab // bk)
+    return start.astype(jnp.int32), nblk.astype(jnp.int32), overflow
+
+
+def plan_csr_grid(points_np: np.ndarray, eps: float, *, dims: int = 3,
+                  chunk: int = 256, block_k: int = 512,
+                  margin_blocks: int = 1) -> CSRGridSpec:
+    """Host-side planning pass for the CSR engine.
+
+    Runs the same sort-by-cell layout the device build runs and measures the
+    worst per-tile slab extent, so the jitted build/sweep shapes are static
+    yet sized by *actual* occupancy (one O(n log n) pass). ``side`` grows
+    beyond ε only when the extent exceeds the Morton bit budget.
+    """
+    n = len(points_np)
+    assert n >= 1, "plan_csr_grid needs at least one point"
+    pts = np.asarray(points_np, np.float32)
+    origin = tuple(float(v) for v in pts.min(axis=0))
+    bits = 15 if dims == 2 else 10
+    ext = float((pts.max(axis=0) - pts.min(axis=0))[:dims].max())
+    side = float(eps)
+    max_cells = (1 << bits) - 2
+    if math.floor(ext / side) + 1 > max_cells:
+        side = ext / (max_cells - 1) * (1 + 1e-5)
+    _, _, lo, hi = _csr_layout(jnp.asarray(pts), side, origin, dims, bits)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    T = max(1, -(-n // chunk))
+    pad_idx = np.minimum(np.arange(T * chunk), n - 1)
+    lo_t = lo[pad_idx].reshape(T, chunk).min(axis=1)
+    hi_t = hi[pad_idx].reshape(T, chunk).max(axis=1)
+    need = int((hi_t - (lo_t // block_k) * block_k).max())
+    slab = -(-max(need, 1) // block_k) * block_k + margin_blocks * block_k
+    n_cand = max(-(-n // block_k) * block_k, slab)
+    return CSRGridSpec(side=side, origin=origin, dims=dims, bits=bits,
+                       chunk=chunk, block_k=block_k, n=n, n_tiles=T,
+                       slab=slab, n_cand=n_cand)
+
+
+def build_csr_grid(points: jnp.ndarray, spec: CSRGridSpec) -> CSRGrid:
+    """Jitted CSR build: sort by cell code, derive per-tile slabs.
+
+    The ``overflow`` flag guards the plan/build parity contract (it fires
+    only if device quantization disagrees with the host plan beyond the
+    slab margin — callers should assert it is False once per build).
+    """
+    n = points.shape[0]
+    order, spoints, lo, hi = _csr_layout(points, spec.side, spec.origin,
+                                         spec.dims, spec.bits)
+    starts, nblk, overflow = tile_slabs(
+        lo, hi, n, n_tiles=spec.n_tiles, chunk=spec.chunk,
+        block_k=spec.block_k, slab=spec.slab, n_cand=spec.n_cand)
+    pad_idx = jnp.minimum(jnp.arange(spec.n_tiles * spec.chunk,
+                                     dtype=jnp.int32), n - 1)
+    q_sorted = spoints[pad_idx]
+    cands = jnp.full((spec.n_cand, 3), BIG, jnp.float32).at[:n].set(spoints)
+    return CSRGrid(order=order, q_sorted=q_sorted, cands=cands.T,
+                   starts=starts, nblk=nblk, overflow=overflow)
 
 
 def neighbor_buckets(points: jnp.ndarray, spec: GridSpec) -> tuple:

@@ -8,16 +8,25 @@ An *engine* answers the paper's fused sweep query (DESIGN.md §2):
     minroot[i] = min{ root[j] : j ε-neighbor of i, core[j] }  (INT_MAX if none)
 
 Engines:
-  * ``brute`` — tiled all-pairs sweep (Pallas ``pairwise_sweep``). O(n²) work
-    at roofline VPU efficiency; right answer below ~10⁵ points.
-  * ``grid``  — spatial-hash ε-grid (the paper's BVH, adapted; Pallas
-    ``gathered_sweep`` inner loop). O(n · window) work.
-  * ``bvh``   — LBVH with stack traversal (paper-faithful structure,
+  * ``brute``     — tiled all-pairs sweep (Pallas ``pairwise_sweep``). O(n²)
+    work at roofline VPU efficiency; right answer below ~10⁵ points.
+  * ``grid``      — cell-sorted CSR ε-grid (DESIGN.md §3; Pallas
+    ``csr_sweep`` inner loop): points reordered by Morton cell code, query
+    tiles sweep contiguous candidate slabs sized by actual local occupancy.
+    O(n · window) work, O(n) memory. The default.
+  * ``grid-hash`` — capacity-padded spatial-hash ε-grid (the previous
+    default; Pallas ``gathered_sweep`` inner loop). O(n · 27 · C_max) work
+    and O(H · C) memory — retained for comparison benchmarks and as a
+    fallback where the CSR plan's Morton bit budget is too coarse.
+  * ``bvh``       — LBVH with stack traversal (paper-faithful structure,
     ``repro.core.bvh``); the FDBSCAN baseline runs on this engine.
 
 All sweep functions are pure in their ``state`` pytree so they can be jitted
 once and reused across DBSCAN rounds; factories are cached so repeated runs
-(the paper's multi-run use case, §VI-B) do not recompile.
+(the paper's multi-run use case, §VI-B) do not recompile. The CSR engine
+additionally exposes ``sweep_sorted`` (payloads already in sorted layout) so
+the DBSCAN round driver can stay in sorted order across hooking rounds
+(DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -39,7 +48,10 @@ class Engine(NamedTuple):
     name: str
     state: Any                       # pytree of device arrays
     sweep: Callable                  # (state, core, root) -> (counts, minroot)
-    meta: Any = None                 # e.g. GridSpec
+    meta: Any = None                 # e.g. GridSpec / CSRGridSpec
+    sweep_sorted: Callable | None = None  # (state, croot_sorted) ->
+    #                                  (counts, minroot), all in sorted layout
+    order: Any = None                # (n,) sorted position -> original index
 
 
 class GridState(NamedTuple):
@@ -94,6 +106,38 @@ def _grid_sweep_fn(spec: grid_mod.GridSpec, eps2: float, chunk: int,
 
 
 @functools.lru_cache(maxsize=64)
+def _csr_sweep_fns(spec: grid_mod.CSRGridSpec, eps2: float,
+                   backend: str | None):
+    """Sweep pair for the cell-sorted CSR engine: the standard contract
+    (original order / original root ids) and the sorted-layout fast path."""
+    n = spec.n
+
+    def _call(state: grid_mod.CSRGrid, croot_sorted):
+        croot_pad = jnp.full((spec.n_cand,), INT_MAX, jnp.int32) \
+            .at[:n].set(croot_sorted)
+        counts_p, minroot_p = ops.csr_sweep(
+            state.q_sorted, state.cands, croot_pad, state.starts, state.nblk,
+            jnp.float32(eps2), slab=spec.slab, backend=backend,
+            block_q=spec.chunk, block_k=spec.block_k)
+        return counts_p[:n], minroot_p[:n]
+
+    @jax.jit
+    def sweep(state: grid_mod.CSRGrid, core, root):
+        order = state.order
+        croot_s = ops.fuse_core_root(core[order], root[order])
+        counts_s, minroot_s = _call(state, croot_s)
+        counts = jnp.zeros((n,), jnp.int32).at[order].set(counts_s)
+        minroot = jnp.full((n,), INT_MAX, jnp.int32).at[order].set(minroot_s)
+        return counts, minroot
+
+    @jax.jit
+    def sweep_sorted(state: grid_mod.CSRGrid, croot_sorted):
+        return _call(state, croot_sorted)
+
+    return sweep, sweep_sorted
+
+
+@functools.lru_cache(maxsize=64)
 def _brute_sweep_fn(eps2: float, chunk: int, backend: str | None):
 
     @jax.jit
@@ -115,12 +159,17 @@ def _brute_sweep_fn(eps2: float, chunk: int, backend: str | None):
 def make_engine(points, eps: float, *, engine: str = "grid",
                 backend: str | None = None, chunk: int = 2048,
                 dims: int | None = None,
-                spec: grid_mod.GridSpec | None = None) -> Engine:
+                spec=None) -> Engine:
     """Build an engine over ``points`` (n, 3) for radius ``eps``.
 
-    The structure build (grid hashing / BVH build) happens here — this is the
-    phase the paper's §V-D breaks out as "BVH build time"; benchmarks time
-    ``make_engine`` separately from the sweeps for the same breakdown.
+    The structure build (cell sort / grid hashing / BVH build) happens here —
+    this is the phase the paper's §V-D breaks out as "BVH build time";
+    benchmarks time ``make_engine`` separately from the sweeps for the same
+    breakdown. ``spec`` lets callers reuse a plan (GridSpec for
+    ``grid-hash``, CSRGridSpec for ``grid``); a reused CSR spec must come
+    from the same dataset — the build raises if its slab capacity doesn't
+    fit. ``chunk`` tiles the brute/grid-hash query sweeps; the CSR engine's
+    tile size is planned (``plan_csr_grid(chunk=...)`` via ``spec``).
     """
     points = jnp.asarray(points, jnp.float32)
     eps2 = float(eps) ** 2
@@ -132,13 +181,28 @@ def make_engine(points, eps: float, *, engine: str = "grid",
         if dims is None:
             dims = infer_dims(pts_np)
         if spec is None:
+            spec = grid_mod.plan_csr_grid(pts_np, float(eps), dims=dims)
+        g = build_csr_grid_jit(points, spec)
+        if bool(g.overflow):
+            raise ValueError(
+                "CSR grid build overflowed the planned slab capacity "
+                f"(slab={spec.slab}) — the spec was planned for different "
+                "data; re-plan with plan_csr_grid on this dataset")
+        fn, fn_sorted = _csr_sweep_fns(spec, eps2, backend)
+        return Engine("grid", g, fn, meta=spec, sweep_sorted=fn_sorted,
+                      order=g.order)
+    if engine == "grid-hash":
+        pts_np = np.asarray(points)
+        if dims is None:
+            dims = infer_dims(pts_np)
+        if spec is None:
             spec = grid_mod.plan_grid(pts_np, float(eps), dims=dims)
         g = build_grid_jit(points, spec)
         buckets, cell_valid = neighbor_buckets_jit(points, spec)
         state = GridState(grid=g, buckets=buckets, cell_valid=cell_valid,
                           points=points)
         fn = _grid_sweep_fn(spec, eps2, chunk, backend)
-        return Engine("grid", state, fn, meta=spec)
+        return Engine("grid-hash", state, fn, meta=spec)
     if engine == "bvh":
         from . import bvh as bvh_mod
         return bvh_mod.make_bvh_engine(points, eps, dims=dims, chunk=chunk)
@@ -146,6 +210,8 @@ def make_engine(points, eps: float, *, engine: str = "grid",
 
 
 build_grid_jit = jax.jit(grid_mod.build_grid, static_argnames=("spec",))
+build_csr_grid_jit = jax.jit(grid_mod.build_csr_grid,
+                             static_argnames=("spec",))
 neighbor_buckets_jit = jax.jit(grid_mod.neighbor_buckets,
                                static_argnames=("spec",))
 

@@ -36,7 +36,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+try:  # jax ≥ 0.5 top-level API (check_vma); older: experimental (check_rep)
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
 
 from ..core.dbscan import DBSCANResult
 
@@ -52,11 +64,16 @@ class DistConfig:
     max_label_rounds: int = 32
     query_chunk: int = 1024
     local_uf_rounds: int = 32
-    # local sweep engine (§Perf iteration C1): "grid" = per-slab hash grid
-    # (O(n·window) work), "brute" = all-pairs tiles (O((n/D)²))
+    # local sweep engine: "csr" = cell-sorted CSR slabs (DESIGN.md §3,
+    # O(n·local window) work, O(n) memory), "grid" = per-slab hash grid
+    # (O(n·27·C) work), "brute" = all-pairs tiles (O((n/D)²))
     local_engine: str = "grid"
     grid_capacity: int = 32      # points per hash bucket (regrows on overflow)
     grid_occupancy: int = 8      # target points per bucket → table size
+    csr_chunk: int = 256         # CSR queries per sweep tile
+    csr_block: int = 512         # CSR slab granularity (elements)
+    csr_slab: int = 4096         # CSR per-tile slab capacity (regrows on
+    #                              overflow, capped by the candidate count)
 
 
 def _sweep_local(queries, cands, croot, eps2, chunk):
@@ -137,8 +154,76 @@ def make_grid_sweep(cand_pts, eps: float, n_cand: int, cfg: DistConfig):
     return sweep, overflow
 
 
-def _local_components(sweep, cand_pts, core, eps2, n_local, chunk, rounds,
-                      brute: bool):
+def make_csr_sweep(cand_pts, eps: float, n_cand: int, cfg: DistConfig):
+    """Per-slab cell-sorted CSR sweep (DESIGN.md §3): sort the candidate set
+    by Morton cell code once, then answer fused (counts, min-core-root)
+    queries for *all* candidates against per-tile contiguous slabs sized by
+    actual local occupancy.
+
+    Unlike the host-planned single-device engine, the slab capacity here is
+    config (``cfg.csr_slab``) — static shapes inside shard_map — with an
+    overflow flag that triggers the driver's regrow-and-restart, exactly like
+    the hash grid's bucket capacity. Padded candidates (coords BIG) sort to a
+    reserved top Morton cell that no real query window can reach.
+
+    Returns (sweep(croot) -> (counts, minroot) over all local candidate
+    indices, overflow flag).
+    """
+    from ..core import grid as grid_mod
+    from ..kernels import ops
+    from ..kernels import ref as kref
+
+    bits = 10
+    eps2 = jnp.float32(eps * eps)
+    real = cand_pts[:, 0] < 1e29
+    lo3 = jnp.min(jnp.where(real[:, None], cand_pts, jnp.inf), axis=0)
+    hi3 = jnp.max(jnp.where(real[:, None], cand_pts, -jnp.inf), axis=0)
+    lo3 = jnp.where(jnp.isfinite(lo3), lo3, 0.0)
+    hi3 = jnp.where(jnp.isfinite(hi3), hi3, 0.0)
+    max_cells = (1 << bits) - 2
+    # side grows past ε only when the extent saturates the Morton bit budget
+    side = jnp.maximum(jnp.float32(eps),
+                       jnp.max(hi3 - lo3) / (max_cells - 1) * (1 + 1e-5))
+    cells = grid_mod.csr_cells(cand_pts, side, lo3, 3, bits)
+    cells = jnp.where(real[:, None], cells, (1 << bits) - 1)  # pads→top cell
+    codes = kref.morton_encode_ref(cells, dims=3)
+    order = jnp.argsort(codes).astype(jnp.int32)
+    spts = cand_pts[order]
+    lo, hi = grid_mod._csr_window_bounds(codes[order], cells[order], 3, bits)
+    # padded queries demand nothing (lo=n / hi=0 drop out of the tile
+    # min/max; their top-cell window never matches an occupied run anyway)
+    real_s = real[order]
+    lo = jnp.where(real_s, lo, n_cand)
+    hi = jnp.where(real_s, hi, 0)
+
+    chunk, bk = cfg.csr_chunk, cfg.csr_block
+    slab = min(-(-cfg.csr_slab // bk) * bk, -(-n_cand // bk) * bk)
+    T = -(-n_cand // chunk)
+    n_csr = max(-(-n_cand // bk) * bk, slab)
+    start, nblk, overflow = grid_mod.tile_slabs(
+        lo, hi, n_cand, n_tiles=T, chunk=chunk, block_k=bk, slab=slab,
+        n_cand=n_csr)
+    pad_q = jnp.minimum(jnp.arange(T * chunk, dtype=jnp.int32), n_cand - 1)
+    q_sorted = spts[pad_q]
+    cands = jnp.full((n_csr, 3), BIG, jnp.float32).at[:n_cand].set(spts)
+    cands_planar = cands.T
+
+    def sweep(croot):
+        croot_pad = jnp.full((n_csr,), INT_MAX, jnp.int32) \
+            .at[:n_cand].set(croot[order])
+        counts_p, m_p = ops.csr_sweep(
+            q_sorted, cands_planar, croot_pad, start, nblk,
+            eps2, slab=slab, block_q=chunk, block_k=bk)
+        counts = jnp.zeros((n_cand,), jnp.int32).at[order].set(
+            counts_p[:n_cand])
+        m = jnp.full((n_cand,), INT_MAX, jnp.int32).at[order].set(
+            m_p[:n_cand])
+        return counts, m
+
+    return sweep, overflow
+
+
+def _local_components(sweep_all, core, n_local, rounds):
     """Local-index union-find over the device's points (owned ∪ halo)."""
     croot0 = jnp.arange(n_local, dtype=jnp.int32)
 
@@ -146,10 +231,7 @@ def _local_components(sweep, cand_pts, core, eps2, n_local, chunk, rounds,
         parent, _, it = state
         root = _compress(parent)
         croot = jnp.where(core, root, INT_MAX)
-        if brute:
-            _, m = _sweep_local(cand_pts, cand_pts, croot, eps2, chunk)
-        else:
-            _, m = sweep(cand_pts, croot)
+        _, m = sweep_all(croot)
         tgt = jnp.minimum(jnp.where(core, m, root), root)
         p2 = root.at[root].min(tgt)
         p2 = _compress(p2)
@@ -283,20 +365,39 @@ def make_distributed_dbscan(mesh, axis_names, n: int, eps: float,
         cand_pts = jnp.concatenate([own_pts, halo_pts], axis=0)
         n_cand = cand_pts.shape[0]
 
-        # local engine (§Perf C1): hash grid over the slab, else brute tiles
-        brute = cfg.local_engine == "brute"
-        if brute:
-            gsweep, ovf3 = None, jnp.bool_(False)
-        else:
+        # local engine: CSR slabs / hash grid / brute tiles. ``sweep_all``
+        # answers queries for every local candidate, ``sweep_own`` for the
+        # owned prefix only.
+        if cfg.local_engine == "brute":
+            ovf3 = jnp.bool_(False)
+
+            def sweep_all(croot):
+                return _sweep_local(cand_pts, cand_pts, croot, eps2,
+                                    cfg.query_chunk)
+
+            def sweep_own(croot):
+                return _sweep_local(own_pts, cand_pts, croot, eps2,
+                                    cfg.query_chunk)
+        elif cfg.local_engine == "csr":
+            sweep_all, ovf3 = make_csr_sweep(cand_pts, eps, n_cand, cfg)
+
+            def sweep_own(croot, _sweep=sweep_all):
+                counts, m = _sweep(croot)
+                return counts[:p_own], m[:p_own]
+        elif cfg.local_engine == "grid":
             gsweep, ovf3 = make_grid_sweep(cand_pts, eps, n_cand, cfg)
+
+            def sweep_all(croot, _g=gsweep):
+                return _g(cand_pts, croot)
+
+            def sweep_own(croot, _g=gsweep):
+                return _g(own_pts, croot)
+        else:
+            raise ValueError(f"unknown local_engine {cfg.local_engine!r}")
 
         # ---- 4. stage 1: core identification (fused sweep) ----
         nocore = jnp.full((n_cand,), INT_MAX, jnp.int32)
-        if brute:
-            counts, _ = _sweep_local(own_pts, cand_pts, nocore, eps2,
-                                     cfg.query_chunk)
-        else:
-            counts, _ = gsweep(own_pts, nocore)
+        counts, _ = sweep_own(nocore)
         core_own = own_valid & (counts >= min_pts)
 
         # halo core flags come from their owners via the same permutes
@@ -308,9 +409,8 @@ def make_distributed_dbscan(mesh, axis_names, n: int, eps: float,
         core_all = jnp.concatenate([core_own, halo_core & halo_valid])
 
         # ---- 5. local components over owned ∪ halo ----
-        root_local = _local_components(gsweep, cand_pts, core_all, eps2,
-                                       n_cand, cfg.query_chunk,
-                                       cfg.local_uf_rounds, brute)
+        root_local = _local_components(sweep_all, core_all, n_cand,
+                                       cfg.local_uf_rounds)
 
         # ---- 6. cross-device label rounds ----
         halo_gidx = (halo[:, 3] - 1.0).astype(jnp.int32)
@@ -348,11 +448,7 @@ def make_distributed_dbscan(mesh, axis_names, n: int, eps: float,
             jax.lax.ppermute(lab_l, ax, perm_l)], axis=0)
         all_lab = jnp.concatenate([label, halo_lab])
         croot = jnp.where(core_all, all_lab, INT_MAX)
-        if brute:
-            _, m = _sweep_local(own_pts, cand_pts, croot, eps2,
-                                cfg.query_chunk)
-        else:
-            _, m = gsweep(own_pts, croot)
+        _, m = sweep_own(croot)
         final = jnp.where(core_own, label,
                           jnp.where(m != INT_MAX, m, -1)).astype(jnp.int32)
         final = jnp.where(own_valid, final, -1)
@@ -413,7 +509,8 @@ def dbscan_distributed(points, eps: float, min_pts: int, mesh,
                                 n_rounds=int(rounds))
         cfg = dataclasses.replace(cfg, send_factor=cfg.send_factor * 2,
                                   halo_factor=cfg.halo_factor * 2,
-                                  grid_capacity=cfg.grid_capacity * 2)
+                                  grid_capacity=cfg.grid_capacity * 2,
+                                  csr_slab=cfg.csr_slab * 2)
     raise RuntimeError(
         "distributed DBSCAN capacity overflow after regrows — data too "
         "skewed for the configured budget")

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .csr_sweep import csr_sweep as _csr_kernel
 from .gathered_sweep import gathered_sweep as _gathered_kernel
 from .morton import morton_encode as _morton_kernel
 from .pairwise_sweep import pairwise_sweep as _pairwise_kernel
@@ -102,6 +103,41 @@ def gathered_sweep(queries, cands, cand_valid, cand_core, cand_root, eps2, *,
         q, jnp.transpose(c, (2, 0, 1)), croot, eps2, block_b=block_b,
         block_k=block_k, interpret=(backend == "interpret"))
     return counts[:b], minroot[:b]
+
+
+def csr_sweep(queries, cands_planar, croot, starts, nblk, eps2, *,
+              slab: int, backend=None, block_q: int = 256,
+              block_k: int = 512):
+    """Cell-sorted CSR slab ε-sweep (grid engine inner loop, DESIGN.md §3).
+
+    queries      (T·block_q, 3) — sorted query tiles (tile t = rows
+                 [t·block_q, (t+1)·block_q))
+    cands_planar (3, nc)        — cell-sorted candidates, nc multiple of
+                 block_k, padded with +BIG
+    croot        (nc,) int32    — root if core else INT32_MAX (sorted order)
+    starts       (T,) int32     — per-tile slab start, in *elements*,
+                 multiples of block_k, with starts + slab ≤ nc
+    nblk         (T,) int32     — per-tile live block count (≤ slab/block_k)
+    slab         static per-tile slab capacity (elements, mult. of block_k)
+
+    Returns counts (T·block_q,) int32, minroot (T·block_q,) int32. Both
+    backends count exactly the ``nblk`` live blocks of each tile's slab, so
+    integer outputs are bit-identical.
+    """
+    backend = backend or default_backend()
+    assert slab % block_k == 0 and queries.shape[0] % block_q == 0
+    eps2 = jnp.asarray(eps2, jnp.float32)
+    starts_blk = (starts // block_k).astype(jnp.int32)
+    croot2 = croot.astype(jnp.int32)[None, :]
+    max_blocks = slab // block_k
+    if backend == "ref":
+        return _ref.csr_sweep_ref(queries.astype(jnp.float32), cands_planar,
+                                  croot2, starts_blk, nblk, eps2,
+                                  max_blocks=max_blocks, block_k=block_k)
+    return _csr_kernel(queries.astype(jnp.float32), cands_planar, croot2,
+                       starts_blk, nblk, eps2, max_blocks=max_blocks,
+                       block_q=block_q, block_k=block_k,
+                       interpret=(backend == "interpret"))
 
 
 def morton_encode(coords, *, dims: int = 3, backend=None, block: int = 1024):

@@ -74,6 +74,59 @@ def gathered_sweep_ref(queries: jnp.ndarray, cands: jnp.ndarray,
     return counts, minroot
 
 
+def csr_sweep_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
+                  croot: jnp.ndarray, starts_blk: jnp.ndarray,
+                  nblk: jnp.ndarray, eps2: jnp.ndarray, *,
+                  max_blocks: int, block_k: int):
+    """Cell-sorted CSR slab sweep (DESIGN.md §3): query tile ``t`` sweeps the
+    contiguous candidate slab ``[starts_blk[t]·block_k,
+    (starts_blk[t]+nblk[t])·block_k)`` of the sorted candidate array.
+
+    queries      (T·block_q, 3) float — sorted query tiles
+    cands_planar (3, nc) float        — cell-sorted candidates (BIG-padded)
+    croot        (1, nc) int32        — root if core else INT32_MAX
+    starts_blk   (T,) int32           — slab start per tile (block_k units)
+    nblk         (T,) int32           — slab block count per tile
+    returns counts (T·block_q,) int32, minroot (T·block_q,) int32
+
+    Semantics match the Pallas kernel exactly: only the ``nblk[t]`` live
+    blocks of each tile's slab are visited (a ``while_loop`` with dynamic
+    trip count — the oracle analogue of the kernel's ``j < nblk`` skip), so
+    integer outputs are bit-identical across backends AND the work adapts to
+    local occupancy on CPU too.
+    """
+    T = starts_blk.shape[0]
+    block_q = queries.shape[0] // T
+
+    def tile(args):
+        qq, st, nb = args
+
+        def cond(carry):
+            b, _, _ = carry
+            return b < nb
+
+        def body(carry):
+            b, counts, minroot = carry
+            off = (st + b) * block_k
+            c = jax.lax.dynamic_slice(cands_planar, (0, off), (3, block_k))
+            r = jax.lax.dynamic_slice(croot, (0, off), (1, block_k))[0]
+            d2 = _dist2(qq[:, None, :], jnp.moveaxis(c, 0, -1)[None, :, :])
+            hit = d2 <= eps2
+            counts = counts + hit.sum(axis=1).astype(jnp.int32)
+            minroot = jnp.minimum(
+                minroot, jnp.where(hit, r[None, :], INT_MAX).min(axis=1))
+            return b + jnp.int32(1), counts, minroot.astype(jnp.int32)
+
+        _, counts, minroot = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), jnp.zeros((block_q,), jnp.int32),
+                         jnp.full((block_q,), INT_MAX, jnp.int32)))
+        return counts, minroot
+
+    counts, minroot = jax.lax.map(
+        tile, (queries.reshape(T, block_q, 3), starts_blk, nblk))
+    return counts.reshape(-1), minroot.reshape(-1)
+
+
 def morton_encode_ref(coords: jnp.ndarray, dims: int = 3) -> jnp.ndarray:
     """30-bit Morton (Z-order) code from quantized integer coords.
 

@@ -19,7 +19,7 @@ def _ref_sweep(pts, eps, core, root):
     return counts, masked.min(1)
 
 
-@pytest.mark.parametrize("engine", ["brute", "grid", "bvh"])
+@pytest.mark.parametrize("engine", ["brute", "grid", "grid-hash", "bvh"])
 @pytest.mark.parametrize("dataset,eps", [("roadnet2d", 0.05), ("taxi2d", 0.1),
                                          ("highway", 1.0), ("iono3d", 2.0)])
 def test_engine_counts_match_oracle(engine, dataset, eps):
@@ -87,7 +87,7 @@ def test_engine_identical_points():
     # many coincident points (degenerate Morton keys / single grid cell)
     pts = np.zeros((64, 3), np.float32)
     pts[32:] += 0.5
-    for engine in ("brute", "grid", "bvh"):
+    for engine in ("brute", "grid", "grid-hash", "bvh"):
         eng = nb.make_engine(pts, 0.1, engine=engine)
         cnt, _ = eng.sweep(eng.state, jnp.zeros(64, bool),
                            jnp.arange(64, dtype=jnp.int32))

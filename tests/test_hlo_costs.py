@@ -25,8 +25,12 @@ def test_scan_flops_exact():
     r, c = _costs(f, W, x)
     assert r["flops"] == 2 * 4 * 64 * 64 * 32
     assert r["dynamic_whiles"] == 0
-    # XLA's own analysis undercounts by the trip count
-    assert c.cost_analysis()["flops"] < r["flops"] / 2
+    # XLA's own analysis undercounts by the trip count (older jax returns a
+    # one-element list of per-module dicts, newer a dict — accept both)
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < r["flops"] / 2
 
 
 def test_nested_scan_multipliers():

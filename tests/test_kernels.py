@@ -46,6 +46,39 @@ def test_gathered_sweep_shapes(b, k):
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(r[1]))
 
 
+@pytest.mark.parametrize("T,block_q,nc_blocks,slab_blocks",
+                         [(1, 8, 1, 1), (4, 64, 8, 3), (3, 256, 6, 6),
+                          (7, 32, 16, 2)])
+def test_csr_sweep_shapes(T, block_q, nc_blocks, slab_blocks):
+    bk = 128
+    nc = nc_blocks * bk
+    slab = slab_blocks * bk
+    rng = np.random.default_rng(4)
+    q = rng.uniform(-1, 1, (T * block_q, 3)).astype(np.float32)
+    c = rng.uniform(-1, 1, (nc, 3)).astype(np.float32)
+    croot = rng.integers(0, 9999, nc).astype(np.int32)
+    croot[rng.uniform(size=nc) < 0.5] = np.iinfo(np.int32).max
+    starts = (rng.integers(0, nc_blocks - slab_blocks + 1, T) * bk) \
+        .astype(np.int32)
+    nblk = rng.integers(0, slab_blocks + 1, T).astype(np.int32)
+    args = (jnp.asarray(q), jnp.asarray(c.T), jnp.asarray(croot),
+            jnp.asarray(starts), jnp.asarray(nblk), 0.4)
+    a = ops.csr_sweep(*args, slab=slab, block_q=block_q, block_k=bk,
+                      backend="interpret")
+    r = ops.csr_sweep(*args, slab=slab, block_q=block_q, block_k=bk,
+                      backend="ref")
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(r[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(r[1]))
+    # cross-check counts against direct numpy over each tile's live slab
+    for t in range(T):
+        sl = slice(starts[t], starts[t] + nblk[t] * bk)
+        d2 = ((q[t * block_q:(t + 1) * block_q, None] - c[None, sl]) ** 2) \
+            .sum(-1)
+        np.testing.assert_array_equal(
+            np.asarray(r[0])[t * block_q:(t + 1) * block_q],
+            (d2 <= 0.4).sum(1))
+
+
 @pytest.mark.parametrize("dims", [2, 3])
 @pytest.mark.parametrize("n", [1, 5, 1024, 1500])
 def test_morton_shapes(dims, n):

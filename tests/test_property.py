@@ -1,7 +1,11 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dev dependency (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.baselines.brute import reference_dbscan
 from repro.core import labels as L
