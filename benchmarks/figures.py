@@ -167,9 +167,10 @@ def fig10_breakdown(full: bool = False):
           f"cluster={t_cluster:.4f},"
           f"build_frac={t_build_grid/(t_build_grid+t_cluster):.2f}")
 
-    t_build_bvh = timeit(lambda: nb.make_engine(pts, eps, engine="bvh"),
+    t_build_bvh = timeit(lambda: nb.make_engine(pts, eps,
+                                                engine="bvh-stack"),
                          repeats=1)
-    engb = nb.make_engine(pts, eps, engine="bvh")
+    engb = nb.make_engine(pts, eps, engine="bvh-stack")
     t_cluster_b = timeit(lambda: dbscan(pts, eps, mp, eng=engb), repeats=1)
     r.row("fdbscan_build", t_build_bvh,
           f"cluster={t_cluster_b:.4f},"
@@ -193,11 +194,17 @@ def table_reuse(full: bool = False):
 
 
 def bench_engine_skew(full: bool = False):
-    """Grid-hash vs grid-csr on pathologically skewed occupancy (one dense
-    clump): the hash engine pays the *global* max bucket capacity for every
-    query (27·C_max candidates each, (H, C) table slots), while the CSR
-    engine's per-tile slabs track local occupancy. The derived column
-    records the candidate-window work each engine actually provisions."""
+    """Engines under pathologically skewed occupancy (one dense clump).
+
+    grid-hash vs grid-csr: the hash engine pays the *global* max bucket
+    capacity for every query (27·C_max candidates each, (H, C) table slots),
+    while the CSR engine's per-tile slabs track local occupancy. bvh-stack
+    vs bvh: the lockstep stack traversal pays the *worst* query's step count
+    for every query, while the wavefront queue's cost tracks total overlap
+    work (DESIGN.md §9). Build time (the paper's §V-D breakdown) is timed
+    separately from clustering via ``make_engine`` + engine reuse; the
+    derived column records the candidate-window work / frontier capacity
+    each engine actually provisions."""
     r = Reporter("bench_engine_skew")
     n = 16_384 if full else 4_096
     pts = synth.load("skewed2d", n, seed=10)
@@ -222,6 +229,26 @@ def bench_engine_skew(full: bool = False):
           f"speedup_vs_hash={t_hash / t_csr:.2f},"
           f"cand_ratio={cand_hash / max(cand_csr, 1):.1f}",
           engine="grid-csr")
+
+    # BVH traversal flavors: build once (timed — §V-D), cluster with the
+    # prebuilt engine so the sweep column isolates traversal cost.
+    times = {}
+    for name in ("bvh-stack", "bvh"):
+        built = []
+        t_build = timeit(
+            lambda: built.append(nb.make_engine(pts, eps, engine=name))
+            or built[-1], repeats=1)
+        eng = built[-1]
+        t_sweep = timeit(lambda: dbscan(pts, eps, minpts, eng=eng),
+                         repeats=1)
+        times[name] = (t_build, t_sweep, eng)
+    tb_s, ts_s, _ = times["bvh-stack"]
+    tb_w, ts_w, eng_w = times["bvh"]
+    r.row(f"bvh-stack@n={n}", ts_s, f"build={tb_s:.4f}", engine="bvh-stack")
+    r.row(f"bvh-wave@n={n}", ts_w,
+          f"build={tb_w:.4f},frontier_cap={eng_w.meta.capacity},"
+          f"speedup_vs_stack={ts_s / ts_w:.2f}",
+          engine="bvh")
     return r.rows
 
 

@@ -24,7 +24,8 @@ print(f"stage-2 rounds : {result.n_rounds} (deterministic scatter-min "
       "union-find, DESIGN.md §2)")
 
 # the engines are interchangeable — same labels, different hardware mapping
-for engine in ("brute", "bvh"):
+# (bvh = wavefront traversal, bvh-stack = the lockstep per-query port)
+for engine in ("brute", "bvh", "bvh-stack"):
     alt = dbscan(points, eps=0.08, min_pts=8, engine=engine)
     same = np.array_equal(L.compact_labels(alt.labels), labels)
     print(f"engine={engine:5s} matches grid: {same}")

@@ -2,10 +2,12 @@
 
 BVH traversal + parallel union-find, no neighbor storage — the strongest
 baseline in the paper (the only one that survives >100K points, §V-B1). Runs
-on our LBVH engine (software traversal, i.e. exactly "FDBSCAN without RT
-cores"). ``early_exit=True`` enables its early traversal termination for
-stage-1 core counting (§VI-B): the traversal's while-condition additionally
-stops at ``count ≥ minPts``.
+on our LBVH *stack* engine (``engine="bvh-stack"``: lockstep per-query
+traversal, i.e. exactly "FDBSCAN without RT cores" — the wavefront engine
+would be RT-DBSCAN's own trick, so the baseline must not use it).
+``early_exit=True`` enables its early traversal termination for stage-1 core
+counting (§VI-B): the traversal's while-condition additionally stops at
+``count ≥ minPts``.
 """
 from __future__ import annotations
 
@@ -21,14 +23,14 @@ def run(points, eps: float, min_pts: int, *, early_exit: bool = False,
     if early_exit:
         # Stage 1 with early termination; stage 2 must traverse fully (it
         # needs the true min core-neighbor root), exactly as in FDBSCAN.
-        eng_early = bvh_mod.make_bvh_engine(points, eps, chunk=chunk,
-                                            early_stop=min_pts)
+        eng_early = bvh_mod.make_bvh_stack_engine(points, eps, chunk=chunk,
+                                                  early_stop=min_pts)
         n = points.shape[0]
         counts, _ = eng_early.sweep(
             eng_early.state, jnp.zeros((n,), bool),
             jnp.arange(n, dtype=jnp.int32))
-        eng = bvh_mod.make_bvh_engine(points, eps, chunk=chunk)
+        eng = bvh_mod.make_bvh_stack_engine(points, eps, chunk=chunk)
         return dbscan(points, eps, min_pts, eng=eng,
                       precomputed_counts=counts, max_rounds=max_rounds)
-    return dbscan(points, eps, min_pts, engine="bvh", chunk=chunk,
+    return dbscan(points, eps, min_pts, engine="bvh-stack", chunk=chunk,
                   max_rounds=max_rounds)

@@ -2,27 +2,41 @@
 
 This is the structural emulation of what the RT cores do in hardware
 (DESIGN.md §2): Morton codes → radix-sorted leaves → Karras (2012) binary
-radix tree → AABBs per internal node → per-query stack traversal with the
-paper's two-level test (dilated-AABB prune, exact sphere refine — Algorithm 2
-line 6). The ε-dilated leaf boxes are exactly the AABBs OptiX builds around
-the paper's ε-spheres.
+radix tree → AABBs per internal node → traversal with the paper's two-level
+test (dilated-AABB prune, exact sphere refine — Algorithm 2 line 6). The
+ε-dilated leaf boxes are exactly the AABBs OptiX builds around the paper's
+ε-spheres.
 
-It exists for two reasons:
-  1. the FDBSCAN baseline (BVH + union-find, optional early traversal
-     termination — paper §VI-B) runs on it;
-  2. it *demonstrates* why a mechanical port is the wrong TPU mapping: the
-     vmapped ``while_loop`` traversal runs every query in lockstep for the
-     worst query's step count — the divergence RT cores absorb in hardware.
+Two traversal engines share the structure (DESIGN.md §9):
+
+  * ``bvh`` — **wavefront** traversal: a level-synchronous frontier of
+    (query, node) pairs, compacted after every level, expanded through the
+    fused prune/refine kernel (``kernels/bvh_sweep.py``). Work tracks the
+    *total* number of overlapping (query, node) pairs — the software
+    analogue of the RT core's ray queue. Exposes ``sweep_sorted`` over the
+    Morton-sorted leaves (the queries *are* the leaves, so the BVH's own
+    order is the sorted layout), which opts it into ``dbscan``'s on-device
+    sorted hooking loop.
+  * ``bvh-stack`` — per-query stack traversal under ``vmap`` + lockstep
+    ``while_loop``: every query steps at the *worst* query's step count —
+    the divergence RT cores absorb in hardware, kept as the FDBSCAN
+    baseline and the divergence benchmark.
 
 Implementation notes:
   * duplicate Morton keys are disambiguated with the sorted index (Karras's
-    key-augmentation trick), so no 64-bit keys are needed;
+    key-augmentation trick), so no 64-bit keys are needed. A corollary: the
+    common-prefix length δ is strictly increasing along any root→leaf path
+    and bounded by 63 (30 code bits + 31 augmentation bits), so tree depth
+    never exceeds 64 — ``max_leaf_depth`` computes the exact bound per tree
+    and the stack engine *raises* at build time if its stack could
+    overflow, instead of silently dropping neighbors;
   * internal-node AABBs come from an O(n log n) sparse table of range
     min/max over the sorted points (every Karras node covers a contiguous
     leaf range), avoiding an iterative bottom-up refit.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -31,10 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from . import engines
 from . import grid as grid_mod
 
 INT_MAX = jnp.iinfo(jnp.int32).max
-STACK = 96
+STACK = 96          # default stack capacity; the provable need is ≤ 65
+MAX_LEVELS = 72     # BFS level bound: Karras depth ≤ 64, plus margin
+_WAVE_TILE = 8192   # default frontier entries expanded per inner step
 
 
 class BVH(NamedTuple):
@@ -68,11 +85,17 @@ def _delta_fn(codes, idx, n):
     return delta
 
 
-def build_bvh(points: jnp.ndarray, *, dims: int = 3) -> BVH:
-    """points (n, 3) f32, n ≥ 2."""
+def build_bvh(points: jnp.ndarray, *, dims: int = 3, lo=None,
+              hi=None) -> BVH:
+    """points (n, 3) f32, n ≥ 2. ``lo``/``hi`` override the quantization
+    extent — the distributed driver passes the *real* point extent so its
+    +BIG padding sentinels (which must sort to the top Morton cell) don't
+    collapse every real point into cell 0."""
     n = points.shape[0]
-    lo = points.min(axis=0)
-    hi = points.max(axis=0)
+    if lo is None:
+        lo = points.min(axis=0)
+    if hi is None:
+        hi = points.max(axis=0)
     scale = jnp.where(hi > lo, 1023.0 / (hi - lo), 0.0)
     q = jnp.clip(((points - lo) * scale), 0, 1023).astype(jnp.int32)
     codes = kops.morton_encode(q, dims=dims)
@@ -85,28 +108,35 @@ def build_bvh(points: jnp.ndarray, *, dims: int = 3) -> BVH:
     def build_node(i):
         d = jnp.where(delta(i, i + 1) >= delta(i, i - 1), 1, -1).astype(jnp.int32)
         dmin = delta(i, i - d)
-        # exponential search for the range length upper bound
-        lmax = jnp.int32(2)
-        for _ in range(31):
-            grow = delta(i, i + lmax * d) > dmin
-            lmax = jnp.where(grow, lmax * 2, lmax)
+
+        # exponential search for the range length upper bound (rolled
+        # fori_loops keep the traced graph tiny — the unrolled version made
+        # this build take ~80 s to *compile* per distinct n)
+        def grow(_, lmax):
+            return jnp.where(delta(i, i + lmax * d) > dmin, lmax * 2, lmax)
+
+        lmax = jax.lax.fori_loop(0, 31, grow, jnp.int32(2))
+
         # binary search the exact length
-        l = jnp.int32(0)
-        t = lmax >> 1
-        for _ in range(31):
+        def bisect(_, carry):
+            l, t = carry
             cond = (t >= 1) & (delta(i, i + (l + t) * d) > dmin)
-            l = jnp.where(cond, l + t, l)
-            t = t >> 1
+            return jnp.where(cond, l + t, l), t >> 1
+
+        l, _ = jax.lax.fori_loop(0, 31, bisect,
+                                 (jnp.int32(0), lmax >> 1))
         j = i + l * d
         dnode = delta(i, j)
+
         # binary search the split position
-        s = jnp.int32(0)
-        done = jnp.bool_(False)
-        for k in range(1, 31):  # n < 2^30 (int32 Morton keys)
-            t = (l + (1 << k) - 1) >> k
+        def split(k, carry):
+            s, done = carry
+            t = (l + (jnp.int32(1) << k) - 1) >> k
             cond = (~done) & (t >= 1) & (delta(i, i + (s + t) * d) > dnode)
-            s = jnp.where(cond, s + t, s)
-            done = done | (t <= 1)
+            return jnp.where(cond, s + t, s), done | (t <= 1)
+
+        s, _ = jax.lax.fori_loop(1, 31, split,  # n < 2^30 (int32 Morton keys)
+                                 (jnp.int32(0), jnp.bool_(False)))
         gamma = i + s * d + jnp.minimum(d, 0)
         first = jnp.minimum(i, j)
         last = jnp.maximum(i, j)
@@ -142,10 +172,255 @@ def build_bvh(points: jnp.ndarray, *, dims: int = 3) -> BVH:
                box_lo=box_lo, box_hi=box_hi)
 
 
+@jax.jit
+def max_leaf_depth(left: jnp.ndarray, right: jnp.ndarray) -> jnp.ndarray:
+    """Exact tree depth (root = 0, result = deepest leaf's depth).
+
+    Depth propagates down one level per iteration; δ-monotonicity bounds
+    Karras depth by 64, so 64 iterations always converge. The DFS stack the
+    ``bvh-stack`` engine needs is at most ``max_leaf_depth + 1`` slots (one
+    pending sibling per ancestor, plus the two children just pushed).
+    """
+    n_int = left.shape[0]
+
+    def body(_, depth):
+        child_d = depth + 1
+        for ch in (left, right):
+            is_int = ch < n_int
+            depth = depth.at[jnp.where(is_int, ch, 0)].max(
+                jnp.where(is_int, child_d, 0))
+        return depth
+
+    depth = jax.lax.fori_loop(0, 64, body, jnp.zeros((n_int,), jnp.int32))
+    return depth.max() + 1
+
+
+# ---------------------------------------------------------------------------
+# Wavefront traversal (engine="bvh", DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WavefrontSpec:
+    """Static plan for the wavefront engine. Hashable → jit-static/cache key.
+
+    ``capacity`` is the frontier slot count per level, calibrated at build
+    time by probing (traversal structure depends only on geometry, never on
+    the sweep payload, so a capacity that survives one payload-free probe
+    survives every later sweep bit-for-bit). ``tile`` is the expansion
+    granularity: each level is processed in ``ceil(live / tile)`` tiles, so
+    per-level cost tracks the *live* frontier, not the capacity — capacity
+    is storage, not work.
+    """
+    eps: float
+    n: int                # leaf count (= query count for sweep_sorted)
+    capacity: int         # frontier slots, multiple of tile
+    tile: int             # frontier entries expanded per inner step
+    max_levels: int       # BFS level bound (Karras depth ≤ 64)
+
+
+def wavefront_sweep(bvh: BVH, queries: jnp.ndarray, croot_leaf: jnp.ndarray,
+                    *, eps: float, eps2: float, capacity: int,
+                    tile: int = 8192, max_levels: int = MAX_LEVELS,
+                    stop_on_overflow: bool = False,
+                    backend: str | None = None):
+    """Level-synchronous BVH traversal for all ``queries`` at once.
+
+    Instead of one stack per query stepping in lockstep, a single work queue
+    of (query, node) pairs is expanded level by level: every live pair emits
+    its two children through the fused prune/refine kernel
+    (``ops.bvh_sweep``), leaf hits are accumulated immediately
+    (scatter-add / scatter-min by query), and surviving internal children
+    are compacted (cumsum prefix + running offset) into the next frontier.
+    Each level runs as ``ceil(live / tile)`` fixed-shape inner steps — a
+    dynamic trip count — so the total cost tracks the number of genuinely
+    overlapping pairs; per-query divergence only changes *where* in the
+    queue work sits, never how long a step takes.
+
+    queries    (nq, 3) f32 — arbitrary query points (need not be the leaves)
+    croot_leaf (n,) int32  — per *leaf* payload: root if core else INT32_MAX
+    Returns (counts (nq,), minroot (nq,), overflow ()): ``overflow`` is True
+    iff some level produced more than ``capacity`` pushes (entries beyond
+    capacity are dropped, so results are then untrustworthy — calibrate with
+    a probe, or regrow and restart, before believing them;
+    ``stop_on_overflow`` abandons the traversal at the first overflowing
+    level, which makes calibration probes cheap).
+    """
+    n = bvh.pts_sorted.shape[0]
+    nq = queries.shape[0]
+    n_int = n - 1
+    tile = min(tile, capacity)
+    C = (capacity // tile) * tile
+    eps_f = jnp.float32(eps)
+    eps2_f = jnp.float32(eps2)
+    lane = jnp.arange(tile, dtype=jnp.int32)
+
+    def level(carry):
+        fq, fn, f, counts, minroot, ovf, lvl = carry
+        n_tiles = (f + tile - 1) // tile
+
+        def expand_tile(t, inner):
+            off, fq2, fn2, counts, minroot = inner
+            start = t * tile
+            sq = jax.lax.dynamic_slice(fq, (start,), (tile,))
+            sn = jax.lax.dynamic_slice(fn, (start,), (tile,))
+            live = start + lane < f
+            node_i = jnp.clip(sn, 0, max(n_int - 1, 0))
+            cq = jnp.concatenate([sq, sq])                   # (2·tile,)
+            cn = jnp.concatenate([bvh.left[node_i], bvh.right[node_i]])
+            cvalid = jnp.concatenate([live, live])
+            is_leaf = cn >= n_int
+            leaf_id = jnp.clip(cn - n_int, 0, n - 1)
+            c_int = jnp.clip(cn, 0, max(n_int - 1, 0))
+            pt = bvh.pts_sorted[leaf_id]
+            blo = jnp.where(is_leaf[:, None], pt, bvh.box_lo[c_int])
+            bhi = jnp.where(is_leaf[:, None], pt, bvh.box_hi[c_int])
+            cr = croot_leaf[leaf_id]
+            qpt = queries[jnp.clip(cq, 0, nq - 1)]
+            hit, mr, push = kops.bvh_sweep(qpt, blo, bhi, cr, is_leaf,
+                                           cvalid, eps_f, eps2_f,
+                                           backend=backend)
+            qsafe = jnp.where(cvalid, cq, nq)                # nq drops
+            counts = counts.at[qsafe].add(hit, mode="drop")
+            minroot = minroot.at[qsafe].min(mr, mode="drop")
+            # compact this tile's pushes behind the previous tiles' (off)
+            pos = jnp.cumsum(push.astype(jnp.int32)) - 1
+            tot = pos[-1] + 1
+            tgt = jnp.where(push, off + pos, C)              # ≥ C drops
+            fq2 = fq2.at[tgt].set(cq, mode="drop")
+            fn2 = fn2.at[tgt].set(cn, mode="drop")
+            return off + tot, fq2, fn2, counts, minroot
+
+        off, fq2, fn2, counts, minroot = jax.lax.fori_loop(
+            0, n_tiles, expand_tile,
+            (jnp.int32(0), jnp.full((C,), nq, jnp.int32),
+             jnp.zeros((C,), jnp.int32), counts, minroot))
+        return (fq2, fn2, jnp.minimum(off, C), counts, minroot,
+                ovf | (off > C), lvl + 1)
+
+    def cond(carry):
+        _, _, f, _, _, ovf, lvl = carry
+        go = jnp.logical_and(f > 0, lvl < max_levels)
+        if stop_on_overflow:
+            go = jnp.logical_and(go, ~ovf)
+        return go
+
+    slot = jnp.arange(C, dtype=jnp.int32)
+    nq_live = min(nq, C)
+    fq0 = jnp.where(slot < nq_live, slot, nq)
+    fn0 = jnp.zeros((C,), jnp.int32)                         # root
+    carry0 = (fq0, fn0, jnp.int32(nq_live),
+              jnp.zeros((nq,), jnp.int32),
+              jnp.full((nq,), INT_MAX, jnp.int32),
+              jnp.bool_(nq > C), jnp.int32(0))
+    _, _, _, counts, minroot, ovf, _ = jax.lax.while_loop(cond, level, carry0)
+    return counts, minroot, ovf
+
+
 @functools.lru_cache(maxsize=64)
-def _bvh_sweep_fn(eps: float, chunk: int, early_stop: int):
-    """Traversal sweep. ``early_stop > 0`` enables FDBSCAN's early traversal
-    termination at ``count ≥ early_stop`` (§VI-B) — stage-1 counting only."""
+def _wave_fns(spec: WavefrontSpec, backend: str | None):
+    """(sweep, sweep_sorted, probe) for one wavefront plan. The queries of
+    ``sweep_sorted`` are the Morton-sorted leaves themselves, so the engine
+    joins the sorted-layout round driver exactly like the CSR grid."""
+    n = spec.n
+    kw = dict(eps=spec.eps, eps2=spec.eps * spec.eps, capacity=spec.capacity,
+              tile=spec.tile, max_levels=spec.max_levels, backend=backend)
+
+    @jax.jit
+    def sweep_sorted(state: BVHState, croot_sorted):
+        counts, minroot, _ = wavefront_sweep(
+            state.bvh, state.bvh.pts_sorted, croot_sorted, **kw)
+        return counts, minroot
+
+    @jax.jit
+    def sweep(state: BVHState, core, root):
+        order = state.bvh.order
+        croot_s = kops.fuse_core_root(core[order], root[order])
+        counts_s, minroot_s, _ = wavefront_sweep(
+            state.bvh, state.bvh.pts_sorted, croot_s, **kw)
+        counts = jnp.zeros((n,), jnp.int32).at[order].set(counts_s)
+        minroot = jnp.full((n,), INT_MAX, jnp.int32).at[order].set(minroot_s)
+        return counts, minroot
+
+    @jax.jit
+    def probe(state: BVHState):
+        _, _, ovf = wavefront_sweep(
+            state.bvh, state.bvh.pts_sorted,
+            jnp.full((n,), INT_MAX, jnp.int32), stop_on_overflow=True, **kw)
+        return ovf
+
+    return sweep, sweep_sorted, probe
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def make_bvh_engine(points, eps: float, *, dims: int | None = None,
+                    backend: str | None = None,
+                    spec: WavefrontSpec | None = None) -> engines.Engine:
+    """Build the wavefront BVH engine (engine="bvh").
+
+    Build = LBVH construction + frontier-capacity calibration: capacity is
+    doubled until one payload-free probe traversal fits, which (traversal
+    structure being payload-independent) guarantees every later sweep fits
+    too. Pass a previous ``Engine.meta`` as ``spec`` to collapse
+    calibration to a single certification probe on a re-run over the same
+    dataset (paper §V-D build amortization).
+    """
+    from .neighbors import infer_dims
+    points = jnp.asarray(points, jnp.float32)
+    n = points.shape[0]
+    if n < 2:
+        raise ValueError("BVH engines need n >= 2 points")
+    if dims is None:
+        dims = infer_dims(np.asarray(points))
+    bvh = jax.jit(build_bvh, static_argnames=("dims",))(points, dims=dims)
+    state = BVHState(bvh=bvh, points=points)
+    if spec is not None:
+        if spec.n != n or spec.eps != float(eps):
+            raise ValueError(
+                f"reused WavefrontSpec was planned for n={spec.n}, "
+                f"eps={spec.eps}; got n={n}, eps={float(eps)}")
+        # sweeps discard the overflow flag (capacity is a build-time
+        # contract), so a reused spec must be re-certified on this tree —
+        # one cheap probe, no doubling loop
+        if bool(_wave_fns(spec, backend)[2](state)):
+            raise ValueError(
+                f"reused WavefrontSpec (capacity={spec.capacity}) "
+                "overflows on this dataset — it was calibrated for "
+                "different points; rebuild without spec=")
+    else:
+        tile = min(_WAVE_TILE, max(512, _round_up(n, 512)))
+        cap = max(_round_up(2 * n, tile), 2 * tile)
+        cap_max = max(4 * n * n, 1 << 20)
+        while True:
+            spec = WavefrontSpec(eps=float(eps), n=n, capacity=cap,
+                                 tile=tile, max_levels=MAX_LEVELS)
+            if not bool(_wave_fns(spec, backend)[2](state)):
+                break
+            if cap >= cap_max:
+                raise RuntimeError(
+                    f"wavefront frontier calibration diverged (capacity "
+                    f"{cap} still overflows for n={n}, eps={eps}) — the "
+                    "data/ε pair is denser than O(n²); use engine='brute'")
+            cap *= 2
+    sweep, sweep_sorted, _ = _wave_fns(spec, backend)
+    return engines.Engine("bvh", state, sweep, meta=spec,
+                          sweep_sorted=sweep_sorted, order=bvh.order)
+
+
+# ---------------------------------------------------------------------------
+# Per-query stack traversal (engine="bvh-stack" — FDBSCAN baseline)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _stack_sweep_fn(eps: float, chunk: int, early_stop: int, stack: int):
+    """Lockstep stack traversal. ``early_stop > 0`` enables FDBSCAN's early
+    traversal termination at ``count ≥ early_stop`` (§VI-B) — stage-1
+    counting only. ``stack`` slots are guaranteed sufficient at build time
+    (``max_leaf_depth`` check), so pushes can never silently wrap."""
     eps2 = jnp.float32(eps * eps)
     eps_f = jnp.float32(eps)
 
@@ -156,7 +431,7 @@ def _bvh_sweep_fn(eps: float, chunk: int, early_stop: int):
         croot_sorted = jnp.where(core, root, INT_MAX).astype(jnp.int32)[bvh.order]
 
         def traverse(qp):
-            stack0 = jnp.zeros((STACK,), jnp.int32)
+            stack0 = jnp.zeros((stack,), jnp.int32)
 
             def cond(st):
                 sp, _, count, _ = st
@@ -166,8 +441,8 @@ def _bvh_sweep_fn(eps: float, chunk: int, early_stop: int):
                 return go
 
             def body(st):
-                sp, stack, count, minroot = st
-                node = stack[sp - 1]
+                sp, stk, count, minroot = st
+                node = stk[sp - 1]
                 sp = sp - 1
                 is_leaf = node >= (n - 1)
                 leaf_id = jnp.clip(node - (n - 1), 0, n - 1)
@@ -190,10 +465,10 @@ def _bvh_sweep_fn(eps: float, chunk: int, early_stop: int):
                                     bvh.box_hi[c_int])
                     overlap = jnp.all((qp >= blo - eps_f) & (qp <= bhi + eps_f))
                     push = (~is_leaf) & overlap
-                    stack = stack.at[jnp.where(push, sp, STACK - 1)].set(
-                        jnp.where(push, ci, stack[STACK - 1]))
+                    stk = stk.at[jnp.where(push, sp, stack - 1)].set(
+                        jnp.where(push, ci, stk[stack - 1]))
                     sp = sp + push.astype(jnp.int32)
-                return sp, stack, count, minroot
+                return sp, stk, count, minroot
 
             sp0 = jnp.int32(1)
             sp, _, count, minroot = jax.lax.while_loop(
@@ -210,13 +485,61 @@ def _bvh_sweep_fn(eps: float, chunk: int, early_stop: int):
     return sweep
 
 
-def make_bvh_engine(points, eps: float, *, dims: int | None = None,
-                    chunk: int = 2048, early_stop: int = 0):
-    from .neighbors import Engine, infer_dims  # local import, no cycle at module load
+def make_bvh_stack_engine(points, eps: float, *, dims: int | None = None,
+                          chunk: int = 2048, early_stop: int = 0,
+                          stack: int = STACK) -> engines.Engine:
+    """Build the per-query stack engine (engine="bvh-stack").
+
+    Overflow safety: a DFS stack needs at most ``max_leaf_depth + 1`` slots;
+    the build measures the actual tree depth and raises if ``stack`` could
+    overflow — the old behaviour silently overwrote slot ``stack - 1`` and
+    dropped neighbors.
+    """
+    from .neighbors import infer_dims
     points = jnp.asarray(points, jnp.float32)
+    n = points.shape[0]
+    if n < 2:
+        raise ValueError("BVH engines need n >= 2 points")
     if dims is None:
         dims = infer_dims(np.asarray(points))
     bvh = jax.jit(build_bvh, static_argnames=("dims",))(points, dims=dims)
+    need = int(max_leaf_depth(bvh.left, bvh.right)) + 1
+    if need > stack:
+        raise RuntimeError(
+            f"BVH stack overflow: traversal of this tree can need {need} "
+            f"stack slots but only {stack} are configured — neighbors would "
+            "be dropped silently. Raise ``stack=`` or use the wavefront "
+            "engine (engine='bvh'), which has no per-query stack.")
     state = BVHState(bvh=bvh, points=points)
-    fn = _bvh_sweep_fn(float(eps), chunk, early_stop)
-    return Engine("bvh", state, fn, meta=None)
+    fn = _stack_sweep_fn(float(eps), chunk, early_stop, stack)
+    return engines.Engine("bvh-stack", state, fn,
+                          meta={"stack": stack, "depth": need - 1})
+
+
+# Builders take only the keywords they honor (plus the standard surface
+# make_engine always forwards) — a misdirected engine-specific keyword like
+# make_engine(engine="bvh", early_stop=...) is a TypeError, never silently
+# ignored.
+
+
+def _build_wavefront(points, eps, *, backend=None, chunk=2048, dims=None,
+                     spec=None):
+    return make_bvh_engine(points, eps, dims=dims, backend=backend, spec=spec)
+
+
+def _build_stack(points, eps, *, backend=None, chunk=2048, dims=None,
+                 spec=None, early_stop=0, stack=STACK):
+    return make_bvh_stack_engine(points, eps, dims=dims, chunk=chunk,
+                                 early_stop=early_stop, stack=stack)
+
+
+engines.register_engine(
+    "bvh", _build_wavefront,
+    doc="LBVH with wavefront (level-compacted work queue) traversal; "
+        "sorted-layout fast path over the Morton-ordered leaves",
+    capabilities=("sweep_sorted",))
+engines.register_engine(
+    "bvh-stack", _build_stack,
+    doc="LBVH with lockstep per-query stack traversal (FDBSCAN baseline; "
+        "supports early_stop=, stack=)",
+    capabilities=("early_stop",))

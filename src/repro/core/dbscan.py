@@ -19,11 +19,12 @@ Two stages over one fused sweep primitive (DESIGN.md §2):
 
 Round drivers (DESIGN.md §5): by default the hooking rounds run inside a
 ``jax.lax.while_loop`` — one device program for all of stage 2, no host
-round-trip per round. For the CSR grid engine the loop additionally runs in
-*sorted layout* (payloads stay cell-sorted across rounds; original-order
-labels are reconstructed once at the end). ``hook_loop="host"`` opts back
-into the per-round Python loop — the distributed driver uses it as its
-checkpoint boundary.
+round-trip per round. For engines advertising the ``sweep_sorted``
+capability (CSR grid, wavefront BVH — the registry field gates this, not
+the engine name) the loop additionally runs in *sorted layout* (payloads
+stay sorted across rounds; original-order labels are reconstructed once at
+the end). ``hook_loop="host"`` opts back into the per-round Python loop —
+the distributed driver uses it as its checkpoint boundary.
 
 Labels are component-min core indices (identical across engines and
 drivers); ``labels.compact_labels`` maps them to 0..k−1 for reporting.
@@ -118,7 +119,7 @@ def _device_loop_fn(sweep, max_rounds: int):
 
 
 @functools.lru_cache(maxsize=64)
-def _csr_stage1_fn(sweep_sorted):
+def _sorted_stage1_fn(sweep_sorted):
     @jax.jit
     def stage1(state, order):
         n = order.shape[0]
@@ -128,14 +129,15 @@ def _csr_stage1_fn(sweep_sorted):
 
 
 @functools.lru_cache(maxsize=64)
-def _csr_driver_fn(sweep_sorted, max_rounds: int):
-    """Sorted-layout stage 2 + border attachment for the CSR engine.
+def _sorted_driver_fn(sweep_sorted, max_rounds: int):
+    """Sorted-layout stage 2 + border attachment for any engine advertising
+    ``sweep_sorted`` (CSR grid, wavefront BVH — DESIGN.md §5, §9).
 
     The union-find runs over *sorted* point ids, so the sweep payloads never
     leave sorted layout across rounds — no per-round gather at all. Original
     label ids (component-min original core index, identical to the brute
     engine's) are reconstructed once at the end via a segment-min over
-    ``order`` (DESIGN.md §5).
+    ``order``.
     """
     @jax.jit
     def run(state, order, core):
@@ -201,14 +203,16 @@ def dbscan(points, eps: float, min_pts: int, *, engine: str = "grid",
         eng = nb.make_engine(points, eps, engine=engine, backend=backend,
                              chunk=chunk)
 
-    # --- CSR fast path: payloads stay in sorted layout across rounds. ---
+    # --- sorted-layout fast path (capability-gated, not name-gated):
+    # engines advertising ``sweep_sorted`` keep payloads in sorted layout
+    # across rounds (CSR grid, wavefront BVH). ---
     if eng.sweep_sorted is not None and hook_loop == "device":
         if precomputed_counts is not None:
             counts = jnp.asarray(precomputed_counts, jnp.int32)
         else:
-            counts = _csr_stage1_fn(eng.sweep_sorted)(eng.state, eng.order)
+            counts = _sorted_stage1_fn(eng.sweep_sorted)(eng.state, eng.order)
         core = counts >= jnp.int32(min_pts)
-        labels, n_rounds = _csr_driver_fn(eng.sweep_sorted, max_rounds)(
+        labels, n_rounds = _sorted_driver_fn(eng.sweep_sorted, max_rounds)(
             eng.state, eng.order, core)
         return DBSCANResult(labels=labels, core=core, counts=counts,
                             n_rounds=int(n_rounds))

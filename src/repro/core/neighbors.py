@@ -7,7 +7,10 @@ An *engine* answers the paper's fused sweep query (DESIGN.md §2):
     counts[i]  = |{ j : ‖p_i − p_j‖² ≤ ε² }|          (self included)
     minroot[i] = min{ root[j] : j ε-neighbor of i, core[j] }  (INT_MAX if none)
 
-Engines:
+Engines (all dispatched through the capability registry in
+``repro.core.engines`` — one table, no per-call-site ``if engine ==``
+chains):
+
   * ``brute``     — tiled all-pairs sweep (Pallas ``pairwise_sweep``). O(n²)
     work at roofline VPU efficiency; right answer below ~10⁵ points.
   * ``grid``      — cell-sorted CSR ε-grid (DESIGN.md §3; Pallas
@@ -18,40 +21,39 @@ Engines:
     default; Pallas ``gathered_sweep`` inner loop). O(n · 27 · C_max) work
     and O(H · C) memory — retained for comparison benchmarks and as a
     fallback where the CSR plan's Morton bit budget is too coarse.
-  * ``bvh``       — LBVH with stack traversal (paper-faithful structure,
-    ``repro.core.bvh``); the FDBSCAN baseline runs on this engine.
+  * ``bvh``       — LBVH with *wavefront* traversal (DESIGN.md §9; Pallas
+    ``bvh_sweep`` level kernel, ``repro.core.bvh``): a level-compacted
+    (query, node) work queue instead of per-query stacks, so traversal cost
+    tracks total overlap work rather than the worst query. Sorted-layout
+    fast path over the Morton-ordered leaves.
+  * ``bvh-stack`` — LBVH with lockstep per-query stack traversal (the
+    mechanical port of the paper's structure; FDBSCAN baseline and
+    divergence benchmark).
 
 All sweep functions are pure in their ``state`` pytree so they can be jitted
 once and reused across DBSCAN rounds; factories are cached so repeated runs
-(the paper's multi-run use case, §VI-B) do not recompile. The CSR engine
-additionally exposes ``sweep_sorted`` (payloads already in sorted layout) so
-the DBSCAN round driver can stay in sorted order across hooking rounds
-(DESIGN.md §5).
+(the paper's multi-run use case, §VI-B) do not recompile. Engines that
+expose ``sweep_sorted`` (payloads already in sorted layout: CSR grid,
+wavefront BVH) let the DBSCAN round driver stay in sorted order across
+hooking rounds (DESIGN.md §5); engines that expose ``neighbors`` back the
+``find_neighbors`` library op (DESIGN.md §6).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from . import engines
 from . import grid as grid_mod
+from .engines import Engine, make_engine  # re-export (public API)  # noqa: F401
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 BIG = grid_mod.BIG
-
-
-class Engine(NamedTuple):
-    name: str
-    state: Any                       # pytree of device arrays
-    sweep: Callable                  # (state, core, root) -> (counts, minroot)
-    meta: Any = None                 # e.g. GridSpec / CSRGridSpec
-    sweep_sorted: Callable | None = None  # (state, croot_sorted) ->
-    #                                  (counts, minroot), all in sorted layout
-    order: Any = None                # (n,) sorted position -> original index
 
 
 class GridState(NamedTuple):
@@ -71,6 +73,18 @@ def _pad0(x, n_pad, value):
         return x
     widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
     return jnp.pad(x, widths, constant_values=value)
+
+
+def _topk_neighbor_ids(hit, cand_idx, k_max: int):
+    """Shared tail of every neighbor-list body: ascending ids of the hits,
+    -1 padded to ``k_max`` columns, plus exact per-row counts."""
+    key = jnp.where(hit, cand_idx, INT_MAX)
+    if key.shape[1] < k_max:
+        key = jnp.pad(key, ((0, 0), (0, k_max - key.shape[1])),
+                      constant_values=INT_MAX)
+    key = jnp.sort(key, axis=1)[:, :k_max]
+    cnt = hit.sum(axis=1).astype(jnp.int32)
+    return jnp.where(key == INT_MAX, -1, key).astype(jnp.int32), cnt
 
 
 @functools.lru_cache(maxsize=64)
@@ -106,6 +120,34 @@ def _grid_sweep_fn(spec: grid_mod.GridSpec, eps2: float, chunk: int,
 
 
 @functools.lru_cache(maxsize=64)
+def _grid_hash_neighbors_fn(spec: grid_mod.GridSpec, eps2: float, chunk: int):
+    """Neighbor lists from the hash grid's gathered candidate windows."""
+    off, cap = spec.n_offsets, spec.capacity
+
+    @functools.partial(jax.jit, static_argnames=("k_max",))
+    def neighbors(state: GridState, k_max: int):
+        g = state.grid
+        n = state.points.shape[0]
+        n_pad = ((n + chunk - 1) // chunk) * chunk
+        q = _pad0(state.points, n_pad, BIG).reshape(-1, chunk, 3)
+        bkt = _pad0(state.buckets, n_pad, 0).reshape(-1, chunk, off)
+        cv = _pad0(state.cell_valid, n_pad, False).reshape(-1, chunk, off)
+
+        def body(args):
+            qq, bb, vv = args
+            cand = g.points[bb].reshape(chunk, off * cap, 3)
+            val = (g.valid[bb] & vv[..., None]).reshape(chunk, off * cap)
+            idx = g.index[bb].reshape(chunk, off * cap)
+            d2 = sum((qq[:, None, k] - cand[:, :, k]) ** 2 for k in range(3))
+            return _topk_neighbor_ids((d2 <= eps2) & val, idx, k_max)
+
+        idx, cnt = jax.lax.map(body, (q, bkt, cv))
+        return idx.reshape(-1, k_max)[:n], cnt.reshape(-1)[:n]
+
+    return neighbors
+
+
+@functools.lru_cache(maxsize=64)
 def _csr_sweep_fns(spec: grid_mod.CSRGridSpec, eps2: float,
                    backend: str | None):
     """Sweep pair for the cell-sorted CSR engine: the standard contract
@@ -138,6 +180,40 @@ def _csr_sweep_fns(spec: grid_mod.CSRGridSpec, eps2: float,
 
 
 @functools.lru_cache(maxsize=64)
+def _csr_neighbors_fn(spec: grid_mod.CSRGridSpec, eps2: float):
+    """Neighbor lists from the CSR engine's per-tile contiguous slabs."""
+    n, slab, bk = spec.n, spec.slab, spec.block_k
+    chunk = spec.chunk
+
+    @functools.partial(jax.jit, static_argnames=("k_max",))
+    def neighbors(state: grid_mod.CSRGrid, k_max: int):
+        order = state.order
+        # original id per sorted position; slab pads (≥ n) can never hit
+        orig = jnp.full((spec.n_cand,), INT_MAX, jnp.int32).at[:n].set(order)
+        live_blk = jnp.arange(slab, dtype=jnp.int32)
+
+        def tile(args):
+            qq, st, nb = args
+            c = jax.lax.dynamic_slice(state.cands, (0, st), (3, slab))
+            oidx = jax.lax.dynamic_slice(orig, (st,), (slab,))
+            live = live_blk < nb * bk
+            d2 = sum((qq[:, None, k] - c[None, k, :]) ** 2 for k in range(3))
+            return _topk_neighbor_ids((d2 <= eps2) & live[None, :],
+                                      oidx[None, :], k_max)
+
+        idx_s, cnt_s = jax.lax.map(
+            tile, (state.q_sorted.reshape(-1, chunk, 3), state.starts,
+                   state.nblk))
+        idx_s = idx_s.reshape(-1, k_max)[:n]
+        cnt_s = cnt_s.reshape(-1)[:n]
+        idx = jnp.full((n, k_max), -1, jnp.int32).at[order].set(idx_s)
+        cnt = jnp.zeros((n,), jnp.int32).at[order].set(cnt_s)
+        return idx, cnt
+
+    return neighbors
+
+
+@functools.lru_cache(maxsize=64)
 def _brute_sweep_fn(eps2: float, chunk: int, backend: str | None):
 
     @jax.jit
@@ -156,57 +232,86 @@ def _brute_sweep_fn(eps2: float, chunk: int, backend: str | None):
     return sweep
 
 
-def make_engine(points, eps: float, *, engine: str = "grid",
-                backend: str | None = None, chunk: int = 2048,
-                dims: int | None = None,
-                spec=None) -> Engine:
-    """Build an engine over ``points`` (n, 3) for radius ``eps``.
+@functools.lru_cache(maxsize=64)
+def _brute_neighbors_fn(eps2: float, chunk: int):
 
-    The structure build (cell sort / grid hashing / BVH build) happens here —
-    this is the phase the paper's §V-D breaks out as "BVH build time";
-    benchmarks time ``make_engine`` separately from the sweeps for the same
-    breakdown. ``spec`` lets callers reuse a plan (GridSpec for
-    ``grid-hash``, CSRGridSpec for ``grid``); a reused CSR spec must come
-    from the same dataset — the build raises if its slab capacity doesn't
-    fit. ``chunk`` tiles the brute/grid-hash query sweeps; the CSR engine's
-    tile size is planned (``plan_csr_grid(chunk=...)`` via ``spec``).
-    """
-    points = jnp.asarray(points, jnp.float32)
+    @functools.partial(jax.jit, static_argnames=("k_max",))
+    def neighbors(points, k_max: int):
+        n = points.shape[0]
+        n_pad = ((n + chunk - 1) // chunk) * chunk
+        q = _pad0(points, n_pad, BIG).reshape(-1, chunk, 3)
+        cand_idx = jnp.arange(n, dtype=jnp.int32)[None, :]
+
+        def body(qq):
+            d2 = sum((qq[:, None, k] - points[None, :, k]) ** 2
+                     for k in range(3))
+            return _topk_neighbor_ids(d2 <= eps2, cand_idx, k_max)
+
+        idx, cnt = jax.lax.map(body, q)
+        return idx.reshape(-1, k_max)[:n], cnt.reshape(-1)[:n]
+
+    return neighbors
+
+
+# --- registry builders (one per engine; the only dispatch table) -----------
+
+
+def _build_brute(points, eps, *, backend=None, chunk=2048, dims=None,
+                 spec=None):
     eps2 = float(eps) ** 2
-    if engine == "brute":
-        fn = _brute_sweep_fn(eps2, chunk, backend)
-        return Engine("brute", points, fn)
-    if engine == "grid":
-        pts_np = np.asarray(points)
-        if dims is None:
-            dims = infer_dims(pts_np)
-        if spec is None:
-            spec = grid_mod.plan_csr_grid(pts_np, float(eps), dims=dims)
-        g = build_csr_grid_jit(points, spec)
-        if bool(g.overflow):
-            raise ValueError(
-                "CSR grid build overflowed the planned slab capacity "
-                f"(slab={spec.slab}) — the spec was planned for different "
-                "data; re-plan with plan_csr_grid on this dataset")
-        fn, fn_sorted = _csr_sweep_fns(spec, eps2, backend)
-        return Engine("grid", g, fn, meta=spec, sweep_sorted=fn_sorted,
-                      order=g.order)
-    if engine == "grid-hash":
-        pts_np = np.asarray(points)
-        if dims is None:
-            dims = infer_dims(pts_np)
-        if spec is None:
-            spec = grid_mod.plan_grid(pts_np, float(eps), dims=dims)
-        g = build_grid_jit(points, spec)
-        buckets, cell_valid = neighbor_buckets_jit(points, spec)
-        state = GridState(grid=g, buckets=buckets, cell_valid=cell_valid,
-                          points=points)
-        fn = _grid_sweep_fn(spec, eps2, chunk, backend)
-        return Engine("grid-hash", state, fn, meta=spec)
-    if engine == "bvh":
-        from . import bvh as bvh_mod
-        return bvh_mod.make_bvh_engine(points, eps, dims=dims, chunk=chunk)
-    raise ValueError(f"unknown engine {engine!r}")
+    return Engine("brute", points, _brute_sweep_fn(eps2, chunk, backend),
+                  neighbors=_brute_neighbors_fn(eps2, chunk))
+
+
+def _build_csr(points, eps, *, backend=None, chunk=2048, dims=None,
+               spec=None):
+    eps2 = float(eps) ** 2
+    pts_np = np.asarray(points)
+    if dims is None:
+        dims = infer_dims(pts_np)
+    if spec is None:
+        spec = grid_mod.plan_csr_grid(pts_np, float(eps), dims=dims)
+    g = build_csr_grid_jit(points, spec)
+    if bool(g.overflow):
+        raise ValueError(
+            "CSR grid build overflowed the planned slab capacity "
+            f"(slab={spec.slab}) — the spec was planned for different "
+            "data; re-plan with plan_csr_grid on this dataset")
+    fn, fn_sorted = _csr_sweep_fns(spec, eps2, backend)
+    return Engine("grid", g, fn, meta=spec, sweep_sorted=fn_sorted,
+                  order=g.order, neighbors=_csr_neighbors_fn(spec, eps2))
+
+
+def _build_grid_hash(points, eps, *, backend=None, chunk=2048, dims=None,
+                     spec=None):
+    eps2 = float(eps) ** 2
+    pts_np = np.asarray(points)
+    if dims is None:
+        dims = infer_dims(pts_np)
+    if spec is None:
+        spec = grid_mod.plan_grid(pts_np, float(eps), dims=dims)
+    g = build_grid_jit(points, spec)
+    buckets, cell_valid = neighbor_buckets_jit(points, spec)
+    state = GridState(grid=g, buckets=buckets, cell_valid=cell_valid,
+                      points=points)
+    return Engine("grid-hash", state, _grid_sweep_fn(spec, eps2, chunk,
+                                                     backend),
+                  meta=spec, neighbors=_grid_hash_neighbors_fn(spec, eps2,
+                                                               chunk))
+
+
+engines.register_engine(
+    "brute", _build_brute,
+    doc="tiled all-pairs sweep (exact, O(n²) compute)",
+    capabilities=("neighbors",))
+engines.register_engine(
+    "grid", _build_csr,
+    doc="cell-sorted CSR ε-grid; sorted-layout fast path (the default)",
+    capabilities=("neighbors", "sweep_sorted"))
+engines.register_engine(
+    "grid-hash", _build_grid_hash,
+    doc="capacity-padded spatial-hash ε-grid (comparison baseline)",
+    capabilities=("neighbors",))
 
 
 build_grid_jit = jax.jit(grid_mod.build_grid, static_argnames=("spec",))
@@ -220,37 +325,17 @@ def find_neighbors(points, eps: float, k_max: int, *, engine: str = "grid",
                    backend: str | None = None, chunk: int = 2048):
     """Generic fixed-radius neighbor *lists* (library op, DESIGN.md §6).
 
+    Dispatches through the engine registry — any engine advertising the
+    ``neighbors`` capability works (``grid``, ``grid-hash``, ``brute``).
     Returns (idx (n, k_max) int32 padded with -1, counts (n,) int32).
     Neighbor indices are ascending; self is included. Overflow beyond
     ``k_max`` is truncated (counts still exact).
     """
-    points = jnp.asarray(points, jnp.float32)
-    n = points.shape[0]
-    eps2 = jnp.float32(float(eps) ** 2)
-    pts_np = np.asarray(points)
-    dims = infer_dims(pts_np)
-    spec = grid_mod.plan_grid(pts_np, float(eps), dims=dims)
-    g = build_grid_jit(points, spec)
-    buckets, cell_valid = neighbor_buckets_jit(points, spec)
-    off, cap = spec.n_offsets, spec.capacity
-
-    n_pad = ((n + chunk - 1) // chunk) * chunk
-    q = _pad0(points, n_pad, BIG).reshape(-1, chunk, 3)
-    bkt = _pad0(buckets, n_pad, 0).reshape(-1, chunk, off)
-    cv = _pad0(cell_valid, n_pad, False).reshape(-1, chunk, off)
-
-    @jax.jit
-    def body(args):
-        qq, bb, vv = args
-        cand = g.points[bb].reshape(chunk, off * cap, 3)
-        val = (g.valid[bb] & vv[..., None]).reshape(chunk, off * cap)
-        idx = g.index[bb].reshape(chunk, off * cap)
-        d2 = sum((qq[:, None, k] - cand[:, :, k]) ** 2 for k in range(3))
-        hit = (d2 <= eps2) & val
-        key = jnp.where(hit, idx, INT_MAX)
-        key = jnp.sort(key, axis=1)[:, :k_max]
-        cnt = hit.sum(axis=1).astype(jnp.int32)
-        return jnp.where(key == INT_MAX, -1, key).astype(jnp.int32), cnt
-
-    idx, cnt = jax.lax.map(body, (q, bkt, cv))
-    return (idx.reshape(-1, k_max)[:n], cnt.reshape(-1)[:n])
+    entry = engines.get_engine_spec(engine)
+    if "neighbors" not in entry.capabilities:
+        raise ValueError(
+            f"engine {engine!r} does not provide the neighbor-list "
+            "capability; use engine='grid', 'grid-hash' or 'brute'")
+    eng = make_engine(points, eps, engine=engine, backend=backend,
+                      chunk=chunk)
+    return eng.neighbors(eng.state, k_max=k_max)

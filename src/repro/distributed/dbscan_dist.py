@@ -50,6 +50,7 @@ except ImportError:  # pragma: no cover - depends on installed jax
         return _shard_map(f, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=check_vma)
 
+from ..core import engines
 from ..core.dbscan import DBSCANResult
 
 INT_MAX = jnp.iinfo(jnp.int32).max
@@ -64,9 +65,11 @@ class DistConfig:
     max_label_rounds: int = 32
     query_chunk: int = 1024
     local_uf_rounds: int = 32
-    # local sweep engine: "csr" = cell-sorted CSR slabs (DESIGN.md §3,
-    # O(n·local window) work, O(n) memory), "grid" = per-slab hash grid
-    # (O(n·27·C) work), "brute" = all-pairs tiles (O((n/D)²))
+    # local sweep engine, resolved through the engine registry
+    # (``engines.register_local_engine``): "csr" = cell-sorted CSR slabs
+    # (DESIGN.md §3, O(n·local window) work, O(n) memory), "grid" = per-slab
+    # hash grid (O(n·27·C) work), "bvh" = wavefront LBVH traversal
+    # (DESIGN.md §9), "brute" = all-pairs tiles (O((n/D)²))
     local_engine: str = "grid"
     grid_capacity: int = 32      # points per hash bucket (regrows on overflow)
     grid_occupancy: int = 8      # target points per bucket → table size
@@ -74,6 +77,8 @@ class DistConfig:
     csr_block: int = 512         # CSR slab granularity (elements)
     csr_slab: int = 4096         # CSR per-tile slab capacity (regrows on
     #                              overflow, capped by the candidate count)
+    bvh_frontier_factor: float = 8.0  # wavefront queue = factor · n_cand
+    #                              entries (regrows on overflow)
 
 
 def _sweep_local(queries, cands, croot, eps2, chunk):
@@ -223,6 +228,103 @@ def make_csr_sweep(cand_pts, eps: float, n_cand: int, cfg: DistConfig):
     return sweep, overflow
 
 
+def make_bvh_wave_sweep(cand_pts, eps: float, n_cand: int, cfg: DistConfig):
+    """Per-slab wavefront LBVH sweep (DESIGN.md §9): build the Karras tree
+    over the candidate set once, then answer fused (counts, min-core-root)
+    queries for all candidates by level-synchronous frontier traversal.
+
+    The frontier capacity is config (``cfg.bvh_frontier_factor`` ·
+    ``n_cand`` — static shapes inside shard_map) with an overflow flag that
+    triggers the driver's regrow-and-restart, like every other local
+    capacity. Traversal structure depends only on geometry, so one
+    payload-free probe at build time certifies every later sweep. Padded
+    candidates (+BIG) quantize to the top Morton cell (the build quantizes
+    over the *real* extent) and, as queries, carry a −BIG sentinel so they
+    fall out of the frontier at the first level.
+
+    Returns (sweep(croot) -> (counts, minroot) over all local candidate
+    indices, overflow flag).
+    """
+    from ..core import bvh as bvh_mod
+
+    real = cand_pts[:, 0] < 1e29
+    lo3 = jnp.min(jnp.where(real[:, None], cand_pts, jnp.inf), axis=0)
+    hi3 = jnp.max(jnp.where(real[:, None], cand_pts, -jnp.inf), axis=0)
+    lo3 = jnp.where(jnp.isfinite(lo3), lo3, 0.0)
+    hi3 = jnp.where(jnp.isfinite(hi3), hi3, 0.0)
+    bvh = bvh_mod.build_bvh(cand_pts, dims=3, lo=lo3, hi=hi3)
+    capacity = -(-int(cfg.bvh_frontier_factor * n_cand) // 512) * 512
+    queries = jnp.where(real[:, None], cand_pts, -BIG)
+    kw = dict(eps=float(eps), eps2=float(eps) ** 2, capacity=capacity)
+    _, _, overflow = bvh_mod.wavefront_sweep(
+        bvh, queries, jnp.full((n_cand,), INT_MAX, jnp.int32),
+        stop_on_overflow=True, **kw)
+
+    def sweep(croot):
+        counts, m, _ = bvh_mod.wavefront_sweep(bvh, queries,
+                                               croot[bvh.order], **kw)
+        return counts, m
+
+    return sweep, overflow
+
+
+# --- local-engine registry builders (DESIGN.md §9): each returns
+# (sweep_all, sweep_own, overflow) where ``sweep_all(croot)`` answers the
+# fused query for every local candidate and ``sweep_own`` for the owned
+# prefix only. ---
+
+
+def _local_brute(cand_pts, eps, n_cand, p_own, cfg):
+    eps2 = jnp.float32(eps * eps)
+
+    def sweep_all(croot):
+        return _sweep_local(cand_pts, cand_pts, croot, eps2, cfg.query_chunk)
+
+    def sweep_own(croot):
+        return _sweep_local(cand_pts[:p_own], cand_pts, croot, eps2,
+                            cfg.query_chunk)
+
+    return sweep_all, sweep_own, jnp.bool_(False)
+
+
+def _local_csr(cand_pts, eps, n_cand, p_own, cfg):
+    sweep_all, overflow = make_csr_sweep(cand_pts, eps, n_cand, cfg)
+
+    def sweep_own(croot):
+        counts, m = sweep_all(croot)
+        return counts[:p_own], m[:p_own]
+
+    return sweep_all, sweep_own, overflow
+
+
+def _local_grid(cand_pts, eps, n_cand, p_own, cfg):
+    gsweep, overflow = make_grid_sweep(cand_pts, eps, n_cand, cfg)
+
+    def sweep_all(croot):
+        return gsweep(cand_pts, croot)
+
+    def sweep_own(croot):
+        return gsweep(cand_pts[:p_own], croot)
+
+    return sweep_all, sweep_own, overflow
+
+
+def _local_bvh(cand_pts, eps, n_cand, p_own, cfg):
+    sweep_all, overflow = make_bvh_wave_sweep(cand_pts, eps, n_cand, cfg)
+
+    def sweep_own(croot):
+        counts, m = sweep_all(croot)
+        return counts[:p_own], m[:p_own]
+
+    return sweep_all, sweep_own, overflow
+
+
+engines.register_local_engine("brute", _local_brute)
+engines.register_local_engine("csr", _local_csr)
+engines.register_local_engine("grid", _local_grid)
+engines.register_local_engine("bvh", _local_bvh)
+
+
 def _local_components(sweep_all, core, n_local, rounds):
     """Local-index union-find over the device's points (owned ∪ halo)."""
     croot0 = jnp.arange(n_local, dtype=jnp.int32)
@@ -307,7 +409,6 @@ def make_distributed_dbscan(mesh, axis_names, n: int, eps: float,
     cap_send = max(8, int(cfg.send_factor * n / (D * D)))
     p_own = D * cap_send
     cap_halo = max(8, int(cfg.halo_factor * n / D))
-    eps2 = jnp.float32(eps * eps)
 
     def impl(pts_local):
         pts_local = pts_local.reshape(n_local, 3)
@@ -365,35 +466,11 @@ def make_distributed_dbscan(mesh, axis_names, n: int, eps: float,
         cand_pts = jnp.concatenate([own_pts, halo_pts], axis=0)
         n_cand = cand_pts.shape[0]
 
-        # local engine: CSR slabs / hash grid / brute tiles. ``sweep_all``
-        # answers queries for every local candidate, ``sweep_own`` for the
-        # owned prefix only.
-        if cfg.local_engine == "brute":
-            ovf3 = jnp.bool_(False)
-
-            def sweep_all(croot):
-                return _sweep_local(cand_pts, cand_pts, croot, eps2,
-                                    cfg.query_chunk)
-
-            def sweep_own(croot):
-                return _sweep_local(own_pts, cand_pts, croot, eps2,
-                                    cfg.query_chunk)
-        elif cfg.local_engine == "csr":
-            sweep_all, ovf3 = make_csr_sweep(cand_pts, eps, n_cand, cfg)
-
-            def sweep_own(croot, _sweep=sweep_all):
-                counts, m = _sweep(croot)
-                return counts[:p_own], m[:p_own]
-        elif cfg.local_engine == "grid":
-            gsweep, ovf3 = make_grid_sweep(cand_pts, eps, n_cand, cfg)
-
-            def sweep_all(croot, _g=gsweep):
-                return _g(cand_pts, croot)
-
-            def sweep_own(croot, _g=gsweep):
-                return _g(own_pts, croot)
-        else:
-            raise ValueError(f"unknown local_engine {cfg.local_engine!r}")
+        # local engine dispatch through the one registry table (DESIGN.md
+        # §9): CSR slabs / hash grid / wavefront BVH / brute tiles.
+        build_local = engines.get_local_engine(cfg.local_engine)
+        sweep_all, sweep_own, ovf3 = build_local(cand_pts, eps, n_cand,
+                                                 p_own, cfg)
 
         # ---- 4. stage 1: core identification (fused sweep) ----
         nocore = jnp.full((n_cand,), INT_MAX, jnp.int32)
@@ -510,7 +587,8 @@ def dbscan_distributed(points, eps: float, min_pts: int, mesh,
         cfg = dataclasses.replace(cfg, send_factor=cfg.send_factor * 2,
                                   halo_factor=cfg.halo_factor * 2,
                                   grid_capacity=cfg.grid_capacity * 2,
-                                  csr_slab=cfg.csr_slab * 2)
+                                  csr_slab=cfg.csr_slab * 2,
+                                  bvh_frontier_factor=cfg.bvh_frontier_factor * 2)
     raise RuntimeError(
         "distributed DBSCAN capacity overflow after regrows — data too "
         "skewed for the configured budget")

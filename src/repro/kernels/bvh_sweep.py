@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: wavefront BVH expand step (DESIGN.md §9).
+
+One breadth-first traversal level of the LBVH. The host-side driver
+(``repro.core.bvh.wavefront_sweep``) keeps a compacted work queue of
+(query, node) pairs — the software analogue of the RT core's ray queue —
+and per level expands every live pair into its two children. This kernel
+fuses the paper's two-level test (Algorithm 2) for all expanded children at
+once:
+
+  * **ε-dilated AABB prune** — internal children whose dilated box misses
+    the query are killed; survivors are pushed into the next frontier;
+  * **exact sphere refine** (Algorithm 2 line 6) — leaf children are tested
+    against ε² exactly and contribute (count, min-core-root) on the spot.
+
+Because every frontier entry does identical work, the VPU runs at full
+occupancy regardless of per-query divergence — the property the lockstep
+per-query stack traversal (``engine="bvh-stack"``) lacks.
+
+Layout: everything coordinate-planar ``(3, f)`` / payload ``(1, f)`` so each
+plane is a natural VPU tile (same convention as ``morton.py``). Leaf entries
+carry their point as a degenerate box (lo = hi = point). Padding / dead
+entries: query = −BIG, box = +BIG, payload = INT32_MAX — geometry that can
+neither hit a sphere nor overlap a box, so no validity plane is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _kernel(scal_ref, q_ref, lo_ref, hi_ref, croot_ref, leaf_ref,
+            hit_ref, minroot_ref, push_ref):
+    eps = scal_ref[0, 0]
+    eps2 = scal_ref[0, 1]
+    bf = q_ref.shape[1]
+    inside = jnp.ones((1, bf), jnp.bool_)
+    d2 = jnp.zeros((1, bf), jnp.float32)
+    for k in range(3):
+        q = q_ref[k : k + 1, :].astype(jnp.float32)
+        lo = lo_ref[k : k + 1, :].astype(jnp.float32)
+        hi = hi_ref[k : k + 1, :].astype(jnp.float32)
+        inside = inside & (q >= lo - eps) & (q <= hi + eps)
+        d = q - lo
+        d2 = d2 + d * d
+    leaf = leaf_ref[...] != 0
+    hit = leaf & (d2 <= eps2)
+    hit_ref[...] = hit.astype(jnp.int32)
+    minroot_ref[...] = jnp.where(hit, croot_ref[...], INT_MAX)
+    push_ref[...] = (jnp.logical_not(leaf) & inside).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def bvh_sweep(q_planar, lo_planar, hi_planar, croot, leaf, scal, *,
+              block: int = 512, interpret: bool = False):
+    """Fused dilated-AABB prune + exact sphere refine over one frontier.
+
+    q_planar   (3, f) float — query point per expanded (query, child) pair
+    lo_planar  (3, f) float — child AABB lo (leaf: the leaf point)
+    hi_planar  (3, f) float — child AABB hi (leaf: the leaf point)
+    croot      (1, f) int32 — leaf payload: root if core else INT32_MAX
+    leaf       (1, f) int32 — 1 iff the child is a leaf
+    scal       (1, 2) f32   — [ε, ε²]
+    f must be a multiple of ``block``. Returns hit (f,) int32 ∈ {0, 1},
+    minroot (f,) int32, push (f,) int32 ∈ {0, 1}.
+    """
+    f = q_planar.shape[1]
+    assert f % block == 0, (f, block)
+    hit, minroot, push = pl.pallas_call(
+        _kernel,
+        grid=(f // block,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((3, block), lambda i: (0, i)),
+            pl.BlockSpec((3, block), lambda i: (0, i)),
+            pl.BlockSpec((3, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, f), jnp.int32),
+            jax.ShapeDtypeStruct((1, f), jnp.int32),
+            jax.ShapeDtypeStruct((1, f), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(scal.astype(jnp.float32), q_planar, lo_planar, hi_planar, croot, leaf)
+    return hit[0], minroot[0], push[0]

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .bvh_sweep import bvh_sweep as _bvh_kernel
 from .csr_sweep import csr_sweep as _csr_kernel
 from .gathered_sweep import gathered_sweep as _gathered_kernel
 from .morton import morton_encode as _morton_kernel
@@ -138,6 +139,39 @@ def csr_sweep(queries, cands_planar, croot, starts, nblk, eps2, *,
                        starts_blk, nblk, eps2, max_blocks=max_blocks,
                        block_q=block_q, block_k=block_k,
                        interpret=(backend == "interpret"))
+
+
+def bvh_sweep(queries, box_lo, box_hi, croot, leaf, valid, eps, eps2, *,
+              backend=None, block: int = 512):
+    """Wavefront BVH expand step (one breadth-first traversal level).
+
+    queries/box_lo/box_hi (f, 3) float, croot (f,) int32, leaf/valid (f,)
+    bool. Leaf children carry their point as a degenerate box (lo = hi).
+    Returns hit (f,) int32 ∈ {0, 1}, minroot (f,) int32, push (f,) bool —
+    see ``ref.bvh_sweep_ref`` for exact semantics. Dead / padded entries are
+    encoded geometrically (query −BIG, box +BIG) so the kernel needs no
+    validity plane; both backends agree bit-for-bit on all three outputs.
+    """
+    backend = backend or default_backend()
+    f = queries.shape[0]
+    eps = jnp.asarray(eps, jnp.float32)
+    eps2 = jnp.asarray(eps2, jnp.float32)
+    if backend == "ref":
+        return _ref.bvh_sweep_ref(queries, box_lo, box_hi, croot, leaf,
+                                  valid, eps, eps2)
+    f_p = _round_up(max(f, 1), block)
+    v3 = valid[:, None]
+    q = _pad_to(jnp.where(v3, queries.astype(jnp.float32), -BIG), f_p, 0, -BIG)
+    lo = _pad_to(jnp.where(v3, box_lo.astype(jnp.float32), BIG), f_p, 0, BIG)
+    hi = _pad_to(jnp.where(v3, box_hi.astype(jnp.float32), BIG), f_p, 0, BIG)
+    cr = _pad_to(jnp.where(valid, croot, INT_MAX).astype(jnp.int32), f_p, 0,
+                 INT_MAX)
+    lf = _pad_to(leaf.astype(jnp.int32), f_p, 0, 0)
+    scal = jnp.stack([eps, eps2]).reshape(1, 2)
+    hit, minroot, push = _bvh_kernel(
+        q.T, lo.T, hi.T, cr[None, :], lf[None, :], scal, block=block,
+        interpret=(backend == "interpret"))
+    return hit[:f], minroot[:f], push[:f].astype(bool)
 
 
 def morton_encode(coords, *, dims: int = 3, backend=None, block: int = 1024):

@@ -127,6 +127,35 @@ def csr_sweep_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
     return counts.reshape(-1), minroot.reshape(-1)
 
 
+def bvh_sweep_ref(queries: jnp.ndarray, box_lo: jnp.ndarray,
+                  box_hi: jnp.ndarray, croot: jnp.ndarray, leaf: jnp.ndarray,
+                  valid: jnp.ndarray, eps: jnp.ndarray, eps2: jnp.ndarray):
+    """Wavefront BVH expand step (DESIGN.md §9): one breadth-first level of
+    (query, child-node) pairs through the paper's two-level test — ε-dilated
+    AABB prune for internal children, exact sphere refine for leaves
+    (Algorithm 2 line 6), fused.
+
+    queries (f, 3) float — query point per expanded pair
+    box_lo  (f, 3) float — child AABB lo (leaf children: the leaf point)
+    box_hi  (f, 3) float — child AABB hi (leaf children: the leaf point)
+    croot   (f,)  int32  — leaf payload: root if core else INT32_MAX
+    leaf    (f,)  bool   — child is a leaf
+    valid   (f,)  bool   — entry is live (frontier slot in use)
+    returns hit (f,) int32 ∈ {0, 1} (leaf within ε),
+            minroot (f,) int32 (croot if hit else INT32_MAX),
+            push (f,) bool (internal child whose dilated box overlaps)
+    """
+    q = queries.astype(jnp.float32)
+    lo = box_lo.astype(jnp.float32)
+    hi = box_hi.astype(jnp.float32)
+    inside = jnp.all((q >= lo - eps) & (q <= hi + eps), axis=1)
+    d2 = _dist2(q, lo)
+    hit = valid & leaf & (d2 <= eps2)
+    push = valid & ~leaf & inside
+    minroot = jnp.where(hit, croot, INT_MAX).astype(jnp.int32)
+    return hit.astype(jnp.int32), minroot, push
+
+
 def morton_encode_ref(coords: jnp.ndarray, dims: int = 3) -> jnp.ndarray:
     """30-bit Morton (Z-order) code from quantized integer coords.
 

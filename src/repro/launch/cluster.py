@@ -12,6 +12,7 @@ import time
 
 import numpy as np
 
+from ..core import engines
 from ..core import labels as L
 from ..core import neighbors as nb
 from ..core.dbscan import dbscan
@@ -26,7 +27,7 @@ def main(argv=None):
     ap.add_argument("--eps", type=float, default=0.08)
     ap.add_argument("--min-pts", type=int, default=16)
     ap.add_argument("--engine", default="grid",
-                    choices=["grid", "bvh", "brute"])
+                    choices=list(engines.available_engines()))
     ap.add_argument("--distributed", action="store_true",
                     help="shard over all local devices (shard_map path)")
     ap.add_argument("--seed", type=int, default=0)

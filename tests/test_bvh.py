@@ -1,0 +1,173 @@
+"""BVH engines: label parity, wavefront invariants, stack-overflow guard.
+
+The acceptance bar (ISSUE 2): wavefront-BVH labels must match the brute
+engine *identically* (both resolve components to min-original-core-index)
+across skew, exact duplicates, n = 2 and all-noise data — the same suite the
+CSR engine passes (tests/test_csr.py) — and the stack engine must refuse to
+build (rather than silently drop neighbors) when the tree could outgrow its
+traversal stack.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.baselines import fdbscan
+from repro.core import bvh as bvh_mod
+from repro.core import engines
+from repro.core import neighbors as nb
+from repro.core.dbscan import dbscan
+from repro.data import synth
+
+INT_MAX = np.iinfo(np.int32).max
+ENGINES = ["bvh", "bvh-stack"]
+
+
+def _assert_matches_brute(pts, eps, minpts, engine, **kw):
+    b = dbscan(pts, eps, minpts, engine="brute")
+    g = dbscan(pts, eps, minpts, engine=engine, **kw)
+    np.testing.assert_array_equal(np.asarray(g.core), np.asarray(b.core))
+    np.testing.assert_array_equal(np.asarray(g.counts), np.asarray(b.counts))
+    np.testing.assert_array_equal(np.asarray(g.labels), np.asarray(b.labels))
+    return g
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_skewed_occupancy_matches_brute(engine):
+    pts = synth.load("skewed2d", 1500, seed=4)
+    _assert_matches_brute(pts, 0.05, 8, engine)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_exact_duplicate_points(engine):
+    # heavy duplication → duplicate Morton keys (index-augmented splits)
+    rng = np.random.default_rng(1)
+    base = rng.uniform(0, 1, (100, 3)).astype(np.float32)
+    pts = np.concatenate([base, base, base[:40]])
+    _assert_matches_brute(pts, 0.03, 3, engine)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_n_two(engine):
+    # the smallest tree: one internal node, two leaves
+    pts = np.array([[0.0, 0.0, 0.0], [0.05, 0.0, 0.0]], np.float32)
+    res = _assert_matches_brute(pts, 0.1, 2, engine)
+    assert np.asarray(res.labels).tolist() == [0, 0]
+    far = np.array([[0.0, 0.0, 0.0], [9.0, 0.0, 0.0]], np.float32)
+    res = _assert_matches_brute(far, 0.1, 2, engine)
+    assert np.asarray(res.labels).tolist() == [-1, -1]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_all_noise(engine):
+    pts = synth.load("highway", 300, seed=6)
+    res = _assert_matches_brute(pts, 1e-4, 5, engine)
+    assert (np.asarray(res.labels) == -1).all()
+
+
+def test_wavefront_capabilities():
+    # the wavefront engine advertises the sorted-layout fast path; the
+    # stack engine does not — the registry drives dispatch off this, never
+    # off the name
+    pts = synth.blobs(300, k=3, seed=0)
+    wave = nb.make_engine(pts, 0.08, engine="bvh")
+    stack = nb.make_engine(pts, 0.08, engine="bvh-stack")
+    assert wave.sweep_sorted is not None
+    assert np.array_equal(np.sort(np.asarray(wave.order)), np.arange(300))
+    assert stack.sweep_sorted is None
+    assert wave.meta.capacity % wave.meta.tile == 0
+    assert "build_s" in wave.timings
+
+
+def test_wavefront_host_loop_matches_device_loop():
+    pts = synth.blobs(400, k=4, seed=5)
+    d = dbscan(pts, 0.08, 5, engine="bvh", hook_loop="device")
+    h = dbscan(pts, 0.08, 5, engine="bvh", hook_loop="host")
+    np.testing.assert_array_equal(np.asarray(d.labels), np.asarray(h.labels))
+
+
+def test_wavefront_spec_reuse():
+    pts = synth.blobs(500, k=3, seed=9)
+    eng = nb.make_engine(pts, 0.08, engine="bvh")
+    reused = nb.make_engine(pts, 0.08, engine="bvh", spec=eng.meta)
+    r1 = dbscan(pts, 0.08, 6, eng=reused)
+    direct = dbscan(pts, 0.08, 6, engine="bvh")
+    np.testing.assert_array_equal(np.asarray(r1.labels),
+                                  np.asarray(direct.labels))
+    with pytest.raises(ValueError, match="planned for"):
+        nb.make_engine(pts[:100], 0.08, engine="bvh", spec=eng.meta)
+
+
+def test_wavefront_overflow_flag_fires_when_capacity_too_small():
+    # bypass calibration: a frontier far below the query count must raise
+    # the overflow flag rather than silently dropping work
+    pts = jnp.asarray(synth.blobs(600, k=2, seed=3), jnp.float32)
+    bvh = bvh_mod.build_bvh(pts, dims=2)
+    croot = jnp.full((600,), INT_MAX, jnp.int32)
+    _, _, ovf = bvh_mod.wavefront_sweep(bvh, pts, croot, eps=0.1, eps2=0.01,
+                                        capacity=64)
+    assert bool(ovf)
+    _, _, ovf = bvh_mod.wavefront_sweep(bvh, pts, croot, eps=0.1, eps2=0.01,
+                                        capacity=1 << 16)
+    assert not bool(ovf)
+
+
+def test_stack_overflow_raises_at_build():
+    # regression for the silent-overflow bug: pushes past the stack used to
+    # overwrite the top slot and drop neighbors. A 256-leaf tree needs at
+    # least log2(256) + 2 = 10 slots; a 4-slot stack must refuse to build.
+    pts = synth.blobs(256, k=3, seed=7)
+    with pytest.raises(RuntimeError, match="stack overflow"):
+        nb.make_engine(pts, 0.08, engine="bvh-stack", stack=4)
+
+
+def test_stack_exact_depth_bound_suffices():
+    # the advertised minimum (max_leaf_depth + 1 = meta["depth"] + 1) must
+    # actually suffice — build with exactly that many slots and stay exact
+    pts = synth.blobs(256, k=3, seed=7)
+    eng = nb.make_engine(pts, 0.08, engine="bvh-stack")
+    need = eng.meta["depth"] + 1
+    tight = nb.make_engine(pts, 0.08, engine="bvh-stack", stack=need)
+    b = dbscan(pts, 0.08, 6, engine="brute")
+    t = dbscan(pts, 0.08, 6, eng=tight)
+    np.testing.assert_array_equal(np.asarray(t.labels), np.asarray(b.labels))
+
+
+def test_fdbscan_early_stop_counts_are_clipped_exactly():
+    # §VI-B early traversal termination: counting stops at minPts, so the
+    # early counts equal min(true, something ≥ minPts) — i.e. they agree
+    # with the true counts below minPts and saturate at ≥ minPts above it.
+    pts = synth.blobs(400, k=3, seed=2)
+    eps, mp = 0.08, 6
+    true = np.asarray(dbscan(pts, eps, mp, engine="brute").counts)
+    eng = bvh_mod.make_bvh_stack_engine(jnp.asarray(pts, jnp.float32), eps,
+                                        early_stop=mp)
+    n = len(pts)
+    early, _ = eng.sweep(eng.state, jnp.zeros((n,), bool),
+                         jnp.arange(n, dtype=jnp.int32))
+    early = np.asarray(early)
+    below = true < mp
+    np.testing.assert_array_equal(early[below], true[below])
+    assert (early[~below] >= mp).all()
+    assert (early <= true).all()
+
+
+def test_fdbscan_early_exit_labels_match_reference():
+    pts = synth.load("skewed2d", 600, seed=8)
+    eps, mp = 0.05, 8
+    ref = dbscan(pts, eps, mp, engine="brute")
+    ee = fdbscan.run(pts, eps, mp, early_exit=True)
+    np.testing.assert_array_equal(np.asarray(ee.core), np.asarray(ref.core))
+    np.testing.assert_array_equal(np.asarray(ee.labels),
+                                  np.asarray(ref.labels))
+
+
+def test_registry_rejects_unknown_engine():
+    pts = synth.blobs(64, k=2, seed=0)
+    with pytest.raises(ValueError, match="unknown engine"):
+        nb.make_engine(pts, 0.1, engine="octree")
+    with pytest.raises(ValueError, match="unknown local_engine"):
+        engines.get_local_engine("octree")
+    for name in ("brute", "grid", "grid-hash", "bvh", "bvh-stack"):
+        assert name in engines.available_engines()
+    for name in ("brute", "grid", "csr", "bvh"):
+        assert name in engines.available_local_engines()

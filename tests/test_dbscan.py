@@ -19,7 +19,8 @@ CASES = [
 ]
 
 
-@pytest.mark.parametrize("engine", ["brute", "grid", "grid-hash", "bvh"])
+@pytest.mark.parametrize("engine", ["brute", "grid", "grid-hash", "bvh",
+                                    "bvh-stack"])
 @pytest.mark.parametrize("name,pts,eps,minpts", CASES,
                          ids=[c[0] for c in CASES])
 def test_dbscan_equivalent_to_reference(engine, name, pts, eps, minpts):

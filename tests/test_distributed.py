@@ -87,6 +87,36 @@ def test_distributed_dbscan_csr_engine():
     assert "OK" in out
 
 
+def test_distributed_dbscan_bvh_engine():
+    out = run_sub("""
+    from repro.launch.mesh import make_mesh
+    from repro.distributed.dbscan_dist import dbscan_distributed, DistConfig
+    from repro.core.dbscan import dbscan
+    from repro.data import synth
+
+    mesh = make_mesh((4,), ("data",))
+    pts = synth.blobs(2048, k=5, seed=11)
+    eps, minpts = 0.07, 6
+    d = dbscan_distributed(pts, eps, minpts, mesh,
+                           cfg=DistConfig(local_engine="bvh"))
+    s = dbscan(pts, eps, minpts, engine="grid")
+
+    def canon(x):
+        x = np.asarray(x); out = np.full(len(x), -1); m = {}
+        for i, v in enumerate(x):
+            if v != -1: out[i] = m.setdefault(v, len(m))
+        return out
+
+    core_s = np.asarray(s.core)
+    assert (np.asarray(d.core) == core_s).all(), "core mismatch"
+    la, lb = canon(d.labels), canon(s.labels)
+    assert ((la == -1) == (lb == -1)).all(), "noise mismatch"
+    assert (la[core_s] == lb[core_s]).all(), "core partition mismatch"
+    print("OK rounds=", d.n_rounds)
+    """, devices=4)
+    assert "OK" in out
+
+
 def test_distributed_dbscan_dense_empty():
     out = run_sub("""
     from repro.launch.mesh import make_mesh

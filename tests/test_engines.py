@@ -19,7 +19,8 @@ def _ref_sweep(pts, eps, core, root):
     return counts, masked.min(1)
 
 
-@pytest.mark.parametrize("engine", ["brute", "grid", "grid-hash", "bvh"])
+@pytest.mark.parametrize("engine", ["brute", "grid", "grid-hash", "bvh",
+                                    "bvh-stack"])
 @pytest.mark.parametrize("dataset,eps", [("roadnet2d", 0.05), ("taxi2d", 0.1),
                                          ("highway", 1.0), ("iono3d", 2.0)])
 def test_engine_counts_match_oracle(engine, dataset, eps):
@@ -70,10 +71,13 @@ def test_grid_handles_tiny_eps_dense_data():
     np.testing.assert_array_equal(np.asarray(cnt), ref)
 
 
-def test_find_neighbors_lists():
+@pytest.mark.parametrize("engine", ["grid", "grid-hash", "brute"])
+def test_find_neighbors_lists(engine):
+    # find_neighbors dispatches through the registry: every engine with the
+    # ``neighbors`` capability must return identical, exact lists
     pts = synth.blobs(300, k=3, seed=9)
     eps = 0.1
-    idx, cnt = nb.find_neighbors(pts, eps, k_max=64)
+    idx, cnt = nb.find_neighbors(pts, eps, k_max=64, engine=engine)
     idx, cnt = np.asarray(idx), np.asarray(cnt)
     d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
     for i in range(0, 300, 23):
@@ -83,11 +87,26 @@ def test_find_neighbors_lists():
         assert np.array_equal(got, expect[:64])
 
 
+def test_find_neighbors_truncates_and_small_kmax():
+    pts = np.zeros((40, 3), np.float32)   # everyone neighbors everyone
+    idx, cnt = nb.find_neighbors(pts, 0.1, k_max=8)
+    assert (np.asarray(cnt) == 40).all()  # counts stay exact past k_max
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.tile(np.arange(8, dtype=np.int32),
+                                          (40, 1)))
+
+
+def test_find_neighbors_rejects_engines_without_capability():
+    pts = synth.blobs(64, k=2, seed=1)
+    with pytest.raises(ValueError, match="neighbor-list"):
+        nb.find_neighbors(pts, 0.1, k_max=8, engine="bvh")
+
+
 def test_engine_identical_points():
     # many coincident points (degenerate Morton keys / single grid cell)
     pts = np.zeros((64, 3), np.float32)
     pts[32:] += 0.5
-    for engine in ("brute", "grid", "grid-hash", "bvh"):
+    for engine in ("brute", "grid", "grid-hash", "bvh", "bvh-stack"):
         eng = nb.make_engine(pts, 0.1, engine=engine)
         cnt, _ = eng.sweep(eng.state, jnp.zeros(64, bool),
                            jnp.arange(64, dtype=jnp.int32))

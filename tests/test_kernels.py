@@ -79,6 +79,33 @@ def test_csr_sweep_shapes(T, block_q, nc_blocks, slab_blocks):
             (d2 <= 0.4).sum(1))
 
 
+@pytest.mark.parametrize("f", [1, 5, 512, 700, 1025])
+def test_bvh_sweep_shapes(f):
+    # wavefront expand step: interpret-mode kernel vs oracle, exact on all
+    # three outputs (hit / minroot / push) across ragged frontier sizes
+    rng = np.random.default_rng(6)
+    q = rng.uniform(-1, 1, (f, 3)).astype(np.float32)
+    a = rng.uniform(-1, 1, (f, 3)).astype(np.float32)
+    b = a + rng.uniform(0, 0.5, (f, 3)).astype(np.float32)
+    leaf = rng.uniform(size=f) < 0.5
+    lo = np.where(leaf[:, None], a, np.minimum(a, b))
+    hi = np.where(leaf[:, None], a, np.maximum(a, b))
+    valid = rng.uniform(size=f) < 0.8
+    croot = rng.integers(0, 9999, f).astype(np.int32)
+    args = [jnp.asarray(x) for x in (q, lo, hi, croot, leaf, valid)]
+    eps, eps2 = 0.25, 0.25 ** 2
+    k = ops.bvh_sweep(*args, eps, eps2, backend="interpret")
+    r = ops.bvh_sweep(*args, eps, eps2, backend="ref")
+    for kk, rr in zip(k, r):
+        np.testing.assert_array_equal(np.asarray(kk), np.asarray(rr))
+    # cross-check against direct numpy
+    inside = ((q >= lo - eps) & (q <= hi + eps)).all(axis=1)
+    d2 = ((q - lo) ** 2).sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(r[0]),
+                                  (valid & leaf & (d2 <= eps2)).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(r[2]), valid & ~leaf & inside)
+
+
 @pytest.mark.parametrize("dims", [2, 3])
 @pytest.mark.parametrize("n", [1, 5, 1024, 1500])
 def test_morton_shapes(dims, n):
