@@ -12,6 +12,7 @@ Systems:
 """
 from __future__ import annotations
 
+import time
 import warnings
 
 import numpy as np
@@ -252,5 +253,76 @@ def bench_engine_skew(full: bool = False):
     return r.rows
 
 
+def bench_serve(full: bool = False):
+    """Serving subsystem (DESIGN.md §10): assign QPS / latency percentiles
+    and recompile behavior under a variable-batch-size request stream.
+
+    The gate the shape-bucket scheduler must clear: after one warmup pass
+    over the bucket ladder, a stream of ragged batch sizes triggers ZERO
+    recompiles — every request lands on an already-traced (bucket, slab)
+    program. QPS and p50/p99 come from the scheduler's own telemetry, so
+    the benchmark measures exactly what a serving loop would see. Ingest
+    throughput (online delta labeling, no compaction) rides along."""
+    from repro import serve
+
+    r = Reporter("bench_serve")
+    n = 60_000 if full else 15_000
+    n_requests = 120 if full else 60
+    pts = synth.load("taxi2d", n, seed=20)
+    eps, minpts = EPS["taxi2d"], MINPTS["taxi2d"]
+
+    t0 = time.perf_counter()
+    snap = serve.build_snapshot(pts, eps, minpts)
+    r.row(f"snapshot_build@n={n}", time.perf_counter() - t0,
+          f"clusters={snap.n_clusters()}", engine="grid")
+
+    sched = serve.BucketScheduler()
+    rng = np.random.default_rng(21)
+
+    def batch(nq):
+        return (rng.uniform(0, 8, (nq, 3)) * [1, 1, 0]).astype(np.float32)
+
+    for b in sched.buckets_upto(1024):  # warmup the bucket ladder
+        serve.assign(snap, batch(b), scheduler=sched)
+    warm_traces = sched.recompiles
+    sched.reset_stats()
+
+    n_q = 0
+    t0 = time.perf_counter()
+    for _ in range(n_requests):
+        nq = int(rng.integers(1, 1024))
+        serve.assign(snap, batch(nq), scheduler=sched)
+        n_q += nq
+    dt = time.perf_counter() - t0
+    p50, p99 = sched.latency_percentiles()
+    r.row(f"assign_stream@n={n}", dt,
+          f"qps={n_q / dt:.0f},p50_s={p50:.5f},p99_s={p99:.5f},"
+          f"recompiles={sched.recompiles},warmup_traces={warm_traces},"
+          f"requests={n_requests}",
+          engine="grid")
+    assert sched.recompiles == 0, \
+        f"bucketed stream retraced {sched.recompiles}x after warmup"
+
+    # steady-state ingest: a throwaway session traces the delta-bucket
+    # ladder (512 then 1024) so the timed session's second ingest lands on
+    # a warm 1024-bucket program — without this the timed region would be
+    # compile-dominated (the delta grows into a fresh bucket per ingest)
+    chunk = batch(512)
+    warm = serve.ServeSession(snap, max_delta_frac=np.inf)
+    warm.ingest(chunk)
+    warm.ingest(chunk)
+    sess = serve.ServeSession(snap, max_delta_frac=np.inf,
+                              scheduler=sched)
+    sess.ingest(chunk)
+    t0 = time.perf_counter()
+    sess.ingest(chunk)
+    dt = time.perf_counter() - t0
+    r.row(f"ingest_chunk@n={n}", dt,
+          f"pts_per_s={len(chunk) / dt:.0f},n_delta={sess.n_delta}",
+          engine="grid")
+    return r.rows
+
+
 ALL_FIGS = [fig4_small_eps, fig5_eps, fig6_size, fig7_growth, fig8_dense,
-            fig9_early_exit, fig10_breakdown, table_reuse, bench_engine_skew]
+            fig9_early_exit, fig10_breakdown, table_reuse, bench_engine_skew,
+            bench_serve]

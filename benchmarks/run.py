@@ -23,7 +23,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run only these figures (comma-separated names)")
     ap.add_argument("--json", nargs="?", const="BENCH_sweep.json",
                     default=None, metavar="PATH",
                     help="also write per-case records to PATH "
@@ -35,16 +36,26 @@ def main(argv=None):
     if args.json:
         common.JSON_SINK = []
 
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        known = {f.__name__ for f in figures.ALL_FIGS}
+        unknown = only - known
+        if unknown:
+            ap.error(f"unknown figure(s) {sorted(unknown)}; "
+                     f"known: {sorted(known)}")
+
     print("name,case,seconds,derived")
     t0 = time.time()
+    failed = []
     for fig in figures.ALL_FIGS:
-        if args.only and fig.__name__ != args.only:
+        if only and fig.__name__ not in only:
             continue
         try:
             fig(full=args.full)
         except Exception as e:  # keep the harness going; report the failure
             print(f"{fig.__name__},ERROR,NA,{type(e).__name__}: {e}",
                   flush=True)
+            failed.append(fig.__name__)
     print(f"# total {time.time() - t0:.1f}s", flush=True)
 
     if args.json:
@@ -59,6 +70,13 @@ def main(argv=None):
         print("\n# Roofline (single-pod, from dry-run):")
         from . import roofline
         roofline.main(["--dir", "results/dryrun", "--mesh", "single"])
+
+    if failed:
+        # every row (incl. ERROR ones) has been printed/written above; a
+        # nonzero exit makes failed acceptance asserts (e.g. bench_serve's
+        # zero-recompile gate) actually fail CI instead of vanishing
+        print(f"# FAILED: {','.join(failed)}", flush=True)
+        sys.exit(2)
 
 
 if __name__ == "__main__":

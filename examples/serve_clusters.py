@@ -1,0 +1,62 @@
+"""Serve a clustered corpus online: freeze a snapshot, stream new points
+through ingest (bounded delta + compaction), and answer new-point queries
+with bucketed assign — the DBSCAN analog of serve_decode.py.
+
+Run: PYTHONPATH=src python examples/serve_clusters.py
+"""
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro import serve
+from repro.data import synth
+from repro.data.pipeline import point_stream
+
+EPS, MINPTS = 0.08, 16
+N_CORPUS, N_STREAM, CHUNK = 20_000, 4_000, 512
+
+# --- freeze a snapshot of a clustered corpus -------------------------------
+pts = synth.load("taxi2d", N_CORPUS, seed=0)
+t0 = time.perf_counter()
+snap = serve.build_snapshot(pts, EPS, MINPTS)
+print(f"snapshot: n={snap.n} clusters={snap.n_clusters()} "
+      f"built in {time.perf_counter() - t0:.2f}s")
+
+# --- stream new points through ingest --------------------------------------
+# seed=0 matches the corpus: the stream samples the SAME hub layout
+# (point_stream pins the dataset's global structure to its seed)
+sess = serve.ServeSession(snap, max_delta_frac=0.1)
+t0 = time.perf_counter()
+n_in = 0
+for chunk in point_stream("taxi2d", N_STREAM, CHUNK, seed=0):
+    res = sess.ingest(chunk)
+    n_in += len(chunk)
+    tag = "compacted" if res.compacted else f"delta={res.n_delta}"
+    print(f"  ingest {len(chunk)} pts ({tag}): "
+          f"{(res.labels >= 0).mean():.0%} clustered")
+dt = time.perf_counter() - t0
+print(f"ingested {n_in} pts in {dt:.2f}s ({n_in / dt:.0f} pts/s, "
+      f"{sess.n_compactions} compactions)")
+
+# --- answer assign queries at varying batch sizes --------------------------
+rng = np.random.default_rng(2)
+for b in sess.scheduler.buckets_upto(1024):        # warmup the bucket ladder
+    sess.assign(rng.uniform(0, 8, (b, 3)).astype(np.float32) * [1, 1, 0])
+sess.scheduler.reset_stats()
+
+t0 = time.perf_counter()
+n_q = 0
+for _ in range(40):
+    nq = int(rng.integers(1, 1024))
+    q = (rng.uniform(0, 8, (nq, 3)) * [1, 1, 0]).astype(np.float32)
+    r = sess.assign(q)
+    n_q += nq
+dt = time.perf_counter() - t0
+p50, p99 = sess.scheduler.latency_percentiles()
+print(f"assigned {n_q} queries in {dt:.2f}s — {n_q / dt:.0f} QPS sustained, "
+      f"p50={p50 * 1e3:.1f}ms p99={p99 * 1e3:.1f}ms, "
+      f"recompiles after warmup: {sess.scheduler.recompiles}")
+print(f"last batch: {(r.labels >= 0).mean():.0%} joined a cluster, "
+      f"median core distance "
+      f"{np.nanmedian(np.where(np.isinf(r.dist), np.nan, r.dist)):.4f}")

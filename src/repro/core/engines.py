@@ -14,6 +14,11 @@ do through the fields of the :class:`Engine` it builds:
                        (DESIGN.md §5);
   * ``neighbors``    — optional neighbor-*list* capability backing
                        ``find_neighbors`` (DESIGN.md §6);
+  * ``query``        — optional cross-corpus query capability (DESIGN.md
+                       §10): answer fresh points against the built (frozen)
+                       structure — the serving subsystem refuses engines
+                       whose ``EngineSpec.capabilities`` lack it *before*
+                       paying for a build;
   * ``meta``         — the engine's static plan (GridSpec / CSRGridSpec /
                        WavefrontSpec), exposed for benchmarks and reuse;
   * ``timings``      — build-time breakdown (paper §V-D): ``make_engine``
@@ -49,6 +54,10 @@ class Engine(NamedTuple):
     order: Any = None                # (n,) sorted position -> original index
     neighbors: Callable | None = None  # (state, k_max=) -> (idx, counts)
     timings: dict | None = None      # build-time breakdown, seconds
+    query: Callable | None = None    # cross-corpus queries (serving,
+    #                                  DESIGN.md §10): (state, queries, nq,
+    #                                  croot_sorted, slab=, block_q=) ->
+    #                                  (counts, minroot, mind2, overflow)
 
 
 class EngineSpec(NamedTuple):

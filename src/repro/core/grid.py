@@ -197,6 +197,8 @@ class CSRGrid(NamedTuple):
     starts: jnp.ndarray   # (T,) int32 slab starts (elements, mult. block_k)
     nblk: jnp.ndarray     # (T,) int32 live blocks per tile slab
     overflow: jnp.ndarray  # () bool: a tile's window outgrew the planned slab
+    codes: jnp.ndarray    # (n,) int32 sorted Morton cell codes — the search
+    #                       structure cross-corpus queries bisect (§10)
 
 
 def csr_cells(points: jnp.ndarray, side: float, origin: tuple, dims: int,
@@ -213,20 +215,29 @@ def csr_cells(points: jnp.ndarray, side: float, origin: tuple, dims: int,
     return c
 
 
-def _csr_window_bounds(sorted_codes, sorted_cells, dims: int, bits: int):
-    """Per sorted query: [lo, hi) positions in the sorted array covering the
-    occupied runs of all 9/27 window cells. Empty window cells are excluded
-    (their searchsorted insertion point would needlessly widen the slab)."""
+def _csr_window_bounds(sorted_codes, cells, dims: int, bits: int):
+    """Per query cell: [lo, hi) positions in the code-sorted corpus covering
+    the occupied runs of all 9/27 window cells. Empty window cells are
+    excluded (their searchsorted insertion point would needlessly widen the
+    slab).
+
+    ``cells`` need not come from the corpus itself: the self-join build
+    passes the corpus's own sorted cells, while cross-corpus queries
+    (DESIGN.md §10) pass *fresh* query cells bisected against the frozen
+    ``sorted_codes`` — the returned bounds have ``cells``'s length, not the
+    corpus's.
+    """
     n = sorted_codes.shape[0]
+    m = cells.shape[0]
     from ..kernels import ref as _kref
     rng = (-1, 0, 1)
     offs = [(dx, dy, dz) for dx in rng for dy in rng
             for dz in (rng if dims == 3 else (0,))]
-    lo = jnp.full((n,), n, jnp.int32)
-    hi = jnp.zeros((n,), jnp.int32)
+    lo = jnp.full((m,), n, jnp.int32)
+    hi = jnp.zeros((m,), jnp.int32)
     cell_cap = (1 << bits) - 2
     for off in offs:
-        nb = jnp.clip(sorted_cells + jnp.asarray(off, jnp.int32), 0, cell_cap)
+        nb = jnp.clip(cells + jnp.asarray(off, jnp.int32), 0, cell_cap)
         if dims == 2:
             nb = nb.at[:, 2].set(0)
         code = _kref.morton_encode_ref(nb, dims=dims)
@@ -250,7 +261,7 @@ def _csr_layout(points, side: float, origin: tuple, dims: int, bits: int):
     order = jnp.argsort(codes).astype(jnp.int32)
     sorted_codes = codes[order]
     lo, hi = _csr_window_bounds(sorted_codes, cells[order], dims, bits)
-    return order, points[order], lo, hi
+    return order, points[order], lo, hi, sorted_codes
 
 
 def tile_slabs(lo, hi, n: int, *, n_tiles: int, chunk: int, block_k: int,
@@ -294,7 +305,7 @@ def plan_csr_grid(points_np: np.ndarray, eps: float, *, dims: int = 3,
     max_cells = (1 << bits) - 2
     if math.floor(ext / side) + 1 > max_cells:
         side = ext / (max_cells - 1) * (1 + 1e-5)
-    _, _, lo, hi = _csr_layout(jnp.asarray(pts), side, origin, dims, bits)
+    _, _, lo, hi, _ = _csr_layout(jnp.asarray(pts), side, origin, dims, bits)
     lo, hi = np.asarray(lo), np.asarray(hi)
     T = max(1, -(-n // chunk))
     pad_idx = np.minimum(np.arange(T * chunk), n - 1)
@@ -316,8 +327,9 @@ def build_csr_grid(points: jnp.ndarray, spec: CSRGridSpec) -> CSRGrid:
     slab margin — callers should assert it is False once per build).
     """
     n = points.shape[0]
-    order, spoints, lo, hi = _csr_layout(points, spec.side, spec.origin,
-                                         spec.dims, spec.bits)
+    order, spoints, lo, hi, codes = _csr_layout(points, spec.side,
+                                                spec.origin, spec.dims,
+                                                spec.bits)
     starts, nblk, overflow = tile_slabs(
         lo, hi, n, n_tiles=spec.n_tiles, chunk=spec.chunk,
         block_k=spec.block_k, slab=spec.slab, n_cand=spec.n_cand)
@@ -326,7 +338,7 @@ def build_csr_grid(points: jnp.ndarray, spec: CSRGridSpec) -> CSRGrid:
     q_sorted = spoints[pad_idx]
     cands = jnp.full((spec.n_cand, 3), BIG, jnp.float32).at[:n].set(spoints)
     return CSRGrid(order=order, q_sorted=q_sorted, cands=cands.T,
-                   starts=starts, nblk=nblk, overflow=overflow)
+                   starts=starts, nblk=nblk, overflow=overflow, codes=codes)
 
 
 def neighbor_buckets(points: jnp.ndarray, spec: GridSpec) -> tuple:

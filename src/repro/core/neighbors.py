@@ -180,6 +180,61 @@ def _csr_sweep_fns(spec: grid_mod.CSRGridSpec, eps2: float,
 
 
 @functools.lru_cache(maxsize=64)
+def _csr_cross_query_fn(spec: grid_mod.CSRGridSpec, eps2: float,
+                        backend: str | None, slab: int, block_q: int):
+    """Cross-corpus query over a frozen CSR layout (DESIGN.md §10).
+
+    The device program behind the ``query`` capability and the serving
+    subsystem's ``assign``: quantize fresh queries with the *corpus* plan,
+    Morton-sort them so tiles share window cells, bisect each query's 9/27
+    window cells against the corpus's sorted codes, reduce to per-tile
+    slabs, and run the ``cross_sweep`` kernel. Results are scattered back
+    to request order before returning.
+
+    The returned function is jitted per (query capacity, slab) — the shape
+    bucketing layer above picks capacities from a small fixed set so a
+    variable request stream reuses a warm cache. ``nq`` (the live query
+    count within the padded batch) is a *dynamic* argument: partially
+    filled buckets do not retrace.
+    """
+    from ..kernels import ref as _kref
+    n_cand = spec.n_cand
+    eff_slab = min(slab, n_cand)  # slab == n_cand covers any window
+
+    @jax.jit
+    def query(codes, cands, croot_sorted, q, nq):
+        Qp = q.shape[0]
+        n = codes.shape[0]
+        valid = jnp.arange(Qp, dtype=jnp.int32) < nq
+        qcells = grid_mod.csr_cells(q, spec.side, spec.origin, spec.dims,
+                                    spec.bits)
+        qcodes = _kref.morton_encode_ref(qcells, dims=spec.dims)
+        # stable sort by code, padding keyed to the end of the batch
+        qorder = jnp.argsort(jnp.where(valid, qcodes, INT_MAX)).astype(
+            jnp.int32)
+        valid_s = valid[qorder]
+        lo, hi = grid_mod._csr_window_bounds(codes, qcells[qorder],
+                                             spec.dims, spec.bits)
+        # dead lanes drop out of the tile min/max (the tile_slabs contract)
+        lo = jnp.where(valid_s, lo, n)
+        hi = jnp.where(valid_s, hi, 0)
+        starts, nblk, overflow = grid_mod.tile_slabs(
+            lo, hi, Qp, n_tiles=Qp // block_q, chunk=block_q,
+            block_k=spec.block_k, slab=eff_slab, n_cand=n_cand)
+        counts_s, minroot_s, mind2_s = ops.cross_sweep(
+            q[qorder], cands, croot_sorted, starts, nblk, jnp.float32(eps2),
+            slab=eff_slab, backend=backend, block_q=block_q,
+            block_k=spec.block_k)
+        counts = jnp.zeros((Qp,), jnp.int32).at[qorder].set(counts_s)
+        minroot = jnp.full((Qp,), INT_MAX, jnp.int32).at[qorder].set(
+            minroot_s)
+        mind2 = jnp.full((Qp,), jnp.inf, jnp.float32).at[qorder].set(mind2_s)
+        return counts, minroot, mind2, overflow
+
+    return query
+
+
+@functools.lru_cache(maxsize=64)
 def _csr_neighbors_fn(spec: grid_mod.CSRGridSpec, eps2: float):
     """Neighbor lists from the CSR engine's per-tile contiguous slabs."""
     n, slab, bk = spec.n, spec.slab, spec.block_k
@@ -278,8 +333,19 @@ def _build_csr(points, eps, *, backend=None, chunk=2048, dims=None,
             f"(slab={spec.slab}) — the spec was planned for different "
             "data; re-plan with plan_csr_grid on this dataset")
     fn, fn_sorted = _csr_sweep_fns(spec, eps2, backend)
+
+    def query(state, q, nq, croot_sorted, *, slab=None, block_q=256):
+        """Cross-corpus queries against this engine's frozen layout: q
+        (Qp, 3) padded queries (Qp multiple of block_q), nq live count,
+        croot_sorted (n_cand,) payload in sorted layout."""
+        fn_q = _csr_cross_query_fn(spec, eps2, backend,
+                                   spec.slab if slab is None else slab,
+                                   block_q)
+        return fn_q(state.codes, state.cands, croot_sorted, q, nq)
+
     return Engine("grid", g, fn, meta=spec, sweep_sorted=fn_sorted,
-                  order=g.order, neighbors=_csr_neighbors_fn(spec, eps2))
+                  order=g.order, neighbors=_csr_neighbors_fn(spec, eps2),
+                  query=query)
 
 
 def _build_grid_hash(points, eps, *, backend=None, chunk=2048, dims=None,
@@ -307,7 +373,7 @@ engines.register_engine(
 engines.register_engine(
     "grid", _build_csr,
     doc="cell-sorted CSR ε-grid; sorted-layout fast path (the default)",
-    capabilities=("neighbors", "sweep_sorted"))
+    capabilities=("neighbors", "sweep_sorted", "query"))
 engines.register_engine(
     "grid-hash", _build_grid_hash,
     doc="capacity-padded spatial-hash ε-grid (comparison baseline)",

@@ -15,6 +15,17 @@ The container is offline, so we generate structurally-matched stand-ins:
 
 All return float32 (n, 3) with z = 0 for 2D, exactly as the paper feeds
 OptiX. Deterministic in (name, n, seed).
+
+``structure_seed`` (optional, every generator) splits the RNG: the
+dataset's *global structure* (taxi hubs, road-graph nodes, blob centers)
+is drawn from ``structure_seed`` while the per-point samples come from
+``seed``. Streaming consumers (``pipeline.point_stream``) use this to
+draw many independent sample chunks from ONE world — without it, a
+per-chunk seed would redraw the hubs/graph per chunk and the chunks would
+not share a distribution (or match a corpus built from the same world).
+``structure_n`` likewise pins the *size* of n-scaled structure (the road
+graph's node count) to the stream total rather than the chunk length.
+Default ``None`` for both reproduces the single-RNG draws bit-for-bit.
 """
 from __future__ import annotations
 
@@ -26,10 +37,24 @@ def _as3(points2d: np.ndarray) -> np.ndarray:
     return np.concatenate([points2d.astype(np.float32), z], axis=1)
 
 
-def roadnet2d(n: int, seed: int = 0) -> np.ndarray:
+def _split_rng(seed: int, structure_seed):
+    """(structure rng, sample rng): one rng drawn through sequentially when
+    no structure_seed is given (the historical layout), separate streams
+    otherwise."""
     rng = np.random.default_rng(seed)
-    n_nodes = max(16, n // 2000)
-    nodes = rng.uniform(0.0, 10.0, (n_nodes, 2))
+    rs = rng if structure_seed is None else np.random.default_rng(
+        structure_seed)
+    return rs, rng
+
+
+def roadnet2d(n: int, seed: int = 0, structure_seed: int | None = None,
+              structure_n: int | None = None) -> np.ndarray:
+    rs, rng = _split_rng(seed, structure_seed)
+    # the road graph scales with the dataset; streaming chunks pass the
+    # STREAM total as structure_n so every chunk shares the corpus-sized
+    # graph instead of a graph sized by the chunk
+    n_nodes = max(16, (n if structure_n is None else structure_n) // 2000)
+    nodes = rs.uniform(0.0, 10.0, (n_nodes, 2))
     pts = np.empty((n, 2), np.float32)
     i = 0
     while i < n:
@@ -44,14 +69,25 @@ def roadnet2d(n: int, seed: int = 0) -> np.ndarray:
     return _as3(pts)
 
 
-def taxi2d(n: int, seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng(seed)
+def taxi2d(n: int, seed: int = 0, structure_seed: int | None = None,
+           structure_n: int | None = None) -> np.ndarray:
+    rs, rng = _split_rng(seed, structure_seed)
     n_hubs = 12
-    hubs = rng.uniform(0.0, 8.0, (n_hubs, 2))
+    hubs = rs.uniform(0.0, 8.0, (n_hubs, 2))
+    # the per-hub width ladder is structure too (it sets hub-local density,
+    # which drives core/noise decisions) — but the historical single-RNG
+    # layout draws it after the samples, so only reroute when split
+    widths = rs.uniform(0.3, 1.0, (n_hubs,)) if structure_seed is not None \
+        else None
     n_blob = int(n * 0.7)
     which = rng.integers(0, n_hubs, n_blob)
-    blob = hubs[which] + rng.normal(0, 0.15, (n_blob, 2)) * \
-        rng.uniform(0.3, 1.0, (n_hubs,))[which][:, None]
+    if widths is None:
+        widths_blob = rng.normal(0, 0.15, (n_blob, 2)) * \
+            rng.uniform(0.3, 1.0, (n_hubs,))[which][:, None]
+    else:
+        widths_blob = rng.normal(0, 0.15, (n_blob, 2)) * \
+            widths[which][:, None]
+    blob = hubs[which] + widths_blob
     n_route = n - n_blob
     a = hubs[rng.integers(0, n_hubs, n_route)]
     b = hubs[rng.integers(0, n_hubs, n_route)]
@@ -60,7 +96,9 @@ def taxi2d(n: int, seed: int = 0) -> np.ndarray:
     return _as3(np.concatenate([blob, route]))
 
 
-def highway(n: int, seed: int = 0) -> np.ndarray:
+def highway(n: int, seed: int = 0, structure_seed: int | None = None,
+            structure_n: int | None = None) -> np.ndarray:
+    # lanes are fixed geometry — no random global structure to share
     rng = np.random.default_rng(seed)
     n_lanes = 9
     lane = rng.integers(0, n_lanes, n)
@@ -70,7 +108,9 @@ def highway(n: int, seed: int = 0) -> np.ndarray:
     return _as3(pts)
 
 
-def iono3d(n: int, seed: int = 0) -> np.ndarray:
+def iono3d(n: int, seed: int = 0, structure_seed: int | None = None,
+           structure_n: int | None = None) -> np.ndarray:
+    # layer sheets are fixed geometry — no random global structure
     rng = np.random.default_rng(seed)
     n_layers = 6
     layer = rng.integers(0, n_layers, n)
@@ -82,7 +122,8 @@ def iono3d(n: int, seed: int = 0) -> np.ndarray:
     return pts
 
 
-def skewed2d(n: int, seed: int = 0) -> np.ndarray:
+def skewed2d(n: int, seed: int = 0, structure_seed: int | None = None,
+             structure_n: int | None = None) -> np.ndarray:
     """Pathologically skewed occupancy: ~30% of the points in one clump far
     denser than any ε of interest, the rest uniform over a wide domain.
 
@@ -93,6 +134,7 @@ def skewed2d(n: int, seed: int = 0) -> np.ndarray:
     """
     rng = np.random.default_rng(seed)
     n_clump = int(n * 0.3)
+    del structure_seed  # clump center is fixed — no random structure
     clump = np.array([5.0, 5.0]) + rng.normal(0, 1e-3, (n_clump, 2))
     rest = rng.uniform(0.0, 10.0, (n - n_clump, 2))
     return _as3(np.concatenate([clump, rest]))
@@ -107,8 +149,11 @@ DATASETS = {
 }
 
 
-def load(name: str, n: int, seed: int = 0) -> np.ndarray:
-    return DATASETS[name](n, seed)
+def load(name: str, n: int, seed: int = 0,
+         structure_seed: int | None = None,
+         structure_n: int | None = None) -> np.ndarray:
+    return DATASETS[name](n, seed, structure_seed=structure_seed,
+                          structure_n=structure_n)
 
 
 def blobs(n: int, k: int = 5, dims: int = 2, seed: int = 0,

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .bvh_sweep import bvh_sweep as _bvh_kernel
+from .cross_sweep import cross_sweep as _cross_kernel
 from .csr_sweep import csr_sweep as _csr_kernel
 from .gathered_sweep import gathered_sweep as _gathered_kernel
 from .morton import morton_encode as _morton_kernel
@@ -139,6 +140,49 @@ def csr_sweep(queries, cands_planar, croot, starts, nblk, eps2, *,
                        starts_blk, nblk, eps2, max_blocks=max_blocks,
                        block_q=block_q, block_k=block_k,
                        interpret=(backend == "interpret"))
+
+
+def cross_sweep(queries, cands_planar, croot, starts, nblk, eps2, *,
+                slab: int, backend=None, block_q: int = 256,
+                block_k: int = 512):
+    """Cross-corpus CSR slab ε-sweep (serving inner loop, DESIGN.md §10).
+
+    The asymmetric sibling of ``csr_sweep``: Q fresh query points against an
+    N-point frozen corpus in cell-sorted CSR layout. The payload plane holds
+    cluster *labels* of core corpus points, so ``minroot`` is directly the
+    DBSCAN-predict answer; ``mind2`` (min d² over the deciding core hits,
+    +inf if none) rides along as an attachment confidence.
+
+    queries      (T·block_q, 3) — Morton-sorted query tiles (tile t = rows
+                 [t·block_q, (t+1)·block_q)); +BIG padding rows never hit
+    cands_planar (3, nc)        — cell-sorted frozen corpus, nc multiple of
+                 block_k, padded with +BIG
+    croot        (nc,) int32    — cluster label if core else INT32_MAX
+    starts       (T,) int32     — per-tile slab start, in *elements*,
+                 multiples of block_k, with starts + slab ≤ nc
+    nblk         (T,) int32     — per-tile live block count (≤ slab/block_k)
+    slab         static per-tile slab capacity (elements, mult. of block_k)
+
+    Returns counts (T·block_q,) int32, minroot (T·block_q,) int32, mind2
+    (T·block_q,) float32. All three are bit-identical across backends (the
+    float output included — both paths take mins over identically computed
+    f32 distances).
+    """
+    backend = backend or default_backend()
+    assert slab % block_k == 0 and queries.shape[0] % block_q == 0
+    eps2 = jnp.asarray(eps2, jnp.float32)
+    starts_blk = (starts // block_k).astype(jnp.int32)
+    croot2 = croot.astype(jnp.int32)[None, :]
+    max_blocks = slab // block_k
+    if backend == "ref":
+        return _ref.cross_sweep_ref(queries.astype(jnp.float32),
+                                    cands_planar, croot2, starts_blk, nblk,
+                                    eps2, max_blocks=max_blocks,
+                                    block_k=block_k)
+    return _cross_kernel(queries.astype(jnp.float32), cands_planar, croot2,
+                         starts_blk, nblk, eps2, max_blocks=max_blocks,
+                         block_q=block_q, block_k=block_k,
+                         interpret=(backend == "interpret"))
 
 
 def bvh_sweep(queries, box_lo, box_hi, croot, leaf, valid, eps, eps2, *,

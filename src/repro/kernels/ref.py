@@ -127,6 +127,67 @@ def csr_sweep_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
     return counts.reshape(-1), minroot.reshape(-1)
 
 
+def cross_sweep_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
+                    croot: jnp.ndarray, starts_blk: jnp.ndarray,
+                    nblk: jnp.ndarray, eps2: jnp.ndarray, *,
+                    max_blocks: int, block_k: int):
+    """Cross-corpus CSR slab sweep (DESIGN.md §10): query tile ``t`` (fresh
+    Morton-sorted points, not corpus members) sweeps the contiguous corpus
+    slab ``[starts_blk[t]·block_k, (starts_blk[t]+nblk[t])·block_k)``.
+
+    queries      (T·block_q, 3) float — sorted query tiles
+    cands_planar (3, nc) float        — cell-sorted frozen corpus (BIG pad)
+    croot        (1, nc) int32        — cluster label if core else INT32_MAX
+    starts_blk   (T,) int32           — slab start per tile (block_k units)
+    nblk         (T,) int32           — slab block count per tile
+    returns counts (T·block_q,) int32   — corpus ε-neighbors (no self term),
+            minroot (T·block_q,) int32  — min core label within ε (predict),
+            mind2 (T·block_q,) float32  — min d² over core hits (+inf none)
+
+    Semantics match the Pallas kernel exactly: only the ``nblk[t]`` live
+    blocks of each tile's slab are visited, distances accumulate in f32 in
+    the same coordinate order, and ``mind2`` is a min over identically
+    computed values — so all three outputs (the float one included) are
+    bit-identical across backends.
+    """
+    T = starts_blk.shape[0]
+    block_q = queries.shape[0] // T
+    INF = jnp.float32(jnp.inf)
+
+    def tile(args):
+        qq, st, nb = args
+
+        def cond(carry):
+            b, _, _, _ = carry
+            return b < nb
+
+        def body(carry):
+            b, counts, minroot, mind2 = carry
+            off = (st + b) * block_k
+            c = jax.lax.dynamic_slice(cands_planar, (0, off), (3, block_k))
+            r = jax.lax.dynamic_slice(croot, (0, off), (1, block_k))[0]
+            d2 = _dist2(qq[:, None, :], jnp.moveaxis(c, 0, -1)[None, :, :])
+            hit = d2 <= eps2
+            core_hit = hit & (r[None, :] != INT_MAX)
+            counts = counts + hit.sum(axis=1).astype(jnp.int32)
+            minroot = jnp.minimum(
+                minroot, jnp.where(core_hit, r[None, :], INT_MAX).min(axis=1))
+            mind2 = jnp.minimum(
+                mind2, jnp.where(core_hit, d2, INF).min(axis=1))
+            return (b + jnp.int32(1), counts, minroot.astype(jnp.int32),
+                    mind2.astype(jnp.float32))
+
+        _, counts, minroot, mind2 = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), jnp.zeros((block_q,), jnp.int32),
+                         jnp.full((block_q,), INT_MAX, jnp.int32),
+                         jnp.full((block_q,), INF, jnp.float32)))
+        return counts, minroot, mind2
+
+    counts, minroot, mind2 = jax.lax.map(
+        tile, (queries.reshape(T, block_q, 3), starts_blk, nblk))
+    return counts.reshape(-1), minroot.reshape(-1), mind2.reshape(-1)
+
+
 def bvh_sweep_ref(queries: jnp.ndarray, box_lo: jnp.ndarray,
                   box_hi: jnp.ndarray, croot: jnp.ndarray, leaf: jnp.ndarray,
                   valid: jnp.ndarray, eps: jnp.ndarray, eps2: jnp.ndarray):

@@ -1,0 +1,21 @@
+"""Online clustering service over the engine registry (DESIGN.md §10).
+
+Batch clustering builds an index, labels the corpus, and discards both;
+serving keeps them: freeze a clustered index as a :class:`ClusterSnapshot`
+(atomic save/load), answer new-point queries with :func:`assign` (the
+``cross_sweep`` kernel, DBSCAN-predict semantics), and stream new points
+through :class:`ServeSession` (bounded delta buffer, parity-tested
+compaction). :class:`BucketScheduler` keeps a variable request stream on a
+warm jit cache via power-of-two shape buckets.
+"""
+from .assign import AssignResult, assign  # noqa: F401
+from .ingest import IngestResult, ServeSession  # noqa: F401
+from .scheduler import BucketScheduler  # noqa: F401
+from .snapshot import (ClusterSnapshot, build_snapshot,  # noqa: F401
+                       load_snapshot, save_snapshot)
+
+__all__ = [
+    "AssignResult", "assign", "IngestResult", "ServeSession",
+    "BucketScheduler", "ClusterSnapshot", "build_snapshot", "load_snapshot",
+    "save_snapshot",
+]

@@ -1,0 +1,114 @@
+"""Online DBSCAN-predict against a frozen snapshot (DESIGN.md §10).
+
+``assign`` answers the serving question: for a batch of *new* points,
+which cluster of the frozen corpus does each belong to? Semantics are the
+standard DBSCAN predict rule, made deterministic the same way the batch
+path is: a query joins the cluster of its minimum-label ε-reachable core
+point; with no core point in range it is noise (−1). Border/noise corpus
+points never attract queries (they don't define reachability), which is
+why the snapshot's payload plane carries ``label if core else INT32_MAX``.
+
+One call is one batched device program: bucket-pad (scheduler), quantize
+with the corpus plan, Morton-sort, bisect window bounds against the frozen
+sorted codes, and run the ``cross_sweep`` kernel over per-tile slabs. The
+per-tile slab capacity starts at the corpus plan's and regrows (double,
+retrace, retry — the same overflow posture as the distributed driver's
+capacities) in the rare case a query tile's window outgrows it; the grown
+value sticks for the snapshot so steady-state serving never regrows twice.
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import neighbors as nb
+from .scheduler import BucketScheduler
+from .snapshot import ClusterSnapshot
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+class AssignResult(NamedTuple):
+    labels: np.ndarray   # (nq,) int32: joined cluster label, or -1 noise
+    counts: np.ndarray   # (nq,) int32: ε-neighbors in the corpus
+    dist: np.ndarray     # (nq,) f32: distance to the nearest deciding core
+    #                      point (+inf for noise) — attachment confidence
+    bucket: int          # padded batch size served (telemetry)
+    seconds: float       # device wall-clock for this call
+
+
+# grown slab capacities keyed by the snapshot's (hashable) plan; a regrow
+# sticks so steady-state serving pays it once, not per call. Keying by spec
+# rather than object identity means the entry survives reload of the same
+# snapshot and can never alias an unrelated one (a different corpus has a
+# different plan); at worst two same-plan snapshots share a grown slab,
+# which only ever over-provisions (eff_slab is clamped to n_cand).
+_SLAB_CACHE: dict = {}
+
+
+def _slab_for(snapshot: ClusterSnapshot) -> int:
+    return _SLAB_CACHE.get(snapshot.spec, snapshot.spec.slab)
+
+
+def assign(snapshot: ClusterSnapshot, queries, *,
+           scheduler: BucketScheduler | None = None,
+           block_q: int = 256, backend: str | None = None,
+           max_regrow: int = 8) -> AssignResult:
+    """Label ``queries`` (nq, 3) against the frozen ``snapshot``.
+
+    Pass a shared ``scheduler`` from a serving loop to get bucketed shape
+    reuse and latency/recompile telemetry across calls; without one an
+    ephemeral scheduler still buckets (so one-off calls hit the same jit
+    cache keys a loop would).
+    """
+    sched = scheduler or BucketScheduler(min_bucket=block_q)
+    q_np = np.asarray(queries, np.float32)
+    if q_np.ndim != 2 or q_np.shape[1] != 3:
+        raise ValueError(f"queries must be (nq, 3), got {q_np.shape}")
+    q_pad, nq = sched.pad(q_np)
+    if q_pad.shape[0] % block_q:
+        raise ValueError(
+            f"bucket {q_pad.shape[0]} not a multiple of block_q={block_q}; "
+            "set the scheduler's min_bucket to a multiple of block_q")
+    spec = snapshot.spec
+    eps2 = float(snapshot.eps) ** 2
+    q_dev = jnp.asarray(q_pad)
+
+    slab = _slab_for(snapshot)
+    t0 = time.perf_counter()
+
+    def trace_key(s):
+        # the full identity of one compiled cross-query program: plan +
+        # shape bucket + slab + tile + backend — a scheduler shared across
+        # snapshots must not conflate their traces
+        return (spec, q_pad.shape[0], s, block_q, backend)
+
+    for attempt in range(max_regrow + 1):
+        fn = nb._csr_cross_query_fn(spec, eps2, backend, slab, block_q)
+        counts, minroot, mind2, overflow = fn(
+            snapshot.codes, snapshot.cands, snapshot.croot_sorted, q_dev,
+            jnp.int32(nq))
+        jax.block_until_ready(counts)
+        if not bool(overflow):
+            break
+        if slab >= spec.n_cand or attempt == max_regrow:
+            raise RuntimeError(
+                f"cross-query slab overflow persists at slab={slab} "
+                f"(n_cand={spec.n_cand}) — corrupt snapshot layout?")
+        sched.note_trace(trace_key(slab))  # the overflowed attempt compiled
+        slab = min(slab * 2, spec.n_cand)
+        _SLAB_CACHE[spec] = slab
+    seconds = time.perf_counter() - t0
+    sched.note_call(trace_key(slab), seconds)
+
+    counts = np.asarray(counts)[:nq]
+    minroot = np.asarray(minroot)[:nq]
+    mind2 = np.asarray(mind2)[:nq]
+    labels = np.where(minroot != INT_MAX, minroot, -1).astype(np.int32)
+    return AssignResult(labels=labels, counts=counts,
+                        dist=np.sqrt(mind2, dtype=np.float32),
+                        bucket=q_pad.shape[0], seconds=seconds)

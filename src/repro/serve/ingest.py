@@ -1,0 +1,233 @@
+"""Streaming ingest: a bounded delta buffer over a frozen snapshot.
+
+The snapshot is immutable (that is what makes it cheap to query and safe
+to publish); new points land in a small *delta* buffer and are labeled
+online with one batched device program per ingest:
+
+  1. **self-sweep** of the delta (tiled all-pairs — the delta is bounded,
+     so O(d²) at VPU efficiency beats building a structure per chunk),
+  2. **cross-sweep** of the delta against the frozen corpus (the same
+     ``cross_sweep`` slab walk ``assign`` uses), giving both corpus
+     neighbor counts and the corpus-cluster anchor per delta point,
+  3. **union-find hooking** over the delta (the scatter-min machinery of
+     ``core/union_find.py``, the same ``_hook_step`` the batch driver
+     runs): delta cores merge among themselves, components adopt their
+     minimum corpus anchor label, anchor-free components open fresh
+     clusters labeled ``n_corpus + min delta index`` (deterministic).
+
+Online labels are exact DBSCAN over (frozen corpus ∪ delta) *except* that
+corpus points keep their snapshot labels — a delta point can promote a
+corpus border point to core or bridge two corpus clusters, and the frozen
+half won't reflect that until **compaction**: once the delta exceeds a
+configured fraction of the corpus (or its capacity), the session
+re-clusters the concatenated dataset from scratch through the ordinary
+batch path and freezes a new snapshot. Compaction is parity-tested: its
+labels are bit-identical to ``dbscan()`` on the concatenation, so the
+serving path never drifts from the batch semantics for more than one
+delta window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import neighbors as nb
+from ..core.dbscan import _hook_step
+from ..core.union_find import pointer_jump
+from ..kernels import ops
+from .assign import _SLAB_CACHE, _slab_for, AssignResult, assign
+from .scheduler import BIG, BucketScheduler
+from .snapshot import ClusterSnapshot, build_snapshot, save_snapshot
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+class IngestResult(NamedTuple):
+    labels: np.ndarray   # (chunk,) int32 online labels of the new points
+    compacted: bool      # this ingest crossed the compaction threshold
+    n_delta: int         # delta points outstanding after this ingest
+
+
+@functools.lru_cache(maxsize=32)
+def _delta_label_fn(spec, eps2: float, min_pts: int, n_corpus: int,
+                    backend: str | None, slab: int, block_q: int,
+                    max_rounds: int = 64):
+    """One device program labeling the whole (padded) delta buffer."""
+    cross = nb._csr_cross_query_fn(spec, eps2, backend, slab, block_q)
+
+    @jax.jit
+    def label(codes, cands, croot_sorted, dpts, d):
+        D = dpts.shape[0]
+        iota = jnp.arange(D, dtype=jnp.int32)
+        valid = iota < d
+        # corpus side: neighbor counts + per-point cluster anchor
+        counts_x, anchor, _, overflow = cross(codes, cands, croot_sorted,
+                                              dpts, d)
+        # delta side: self-join counts (padded rows sit at +BIG; their
+        # mutual zero-distance hits are confined to invalid lanes)
+        zeros = jnp.zeros((D,), bool)
+        counts_s, _ = ops.pairwise_sweep(dpts, dpts, zeros, iota,
+                                         jnp.float32(eps2), backend=backend)
+        counts = counts_x + counts_s            # self included via self-join
+        core_d = valid & (counts >= jnp.int32(min_pts))
+
+        # hook delta cores into components (same rounds as the batch driver)
+        def cond(carry):
+            _, changed, it = carry
+            return jnp.logical_and(changed, it < max_rounds)
+
+        def body(carry):
+            parent, _, it = carry
+            root = pointer_jump(parent)
+            _, m = ops.pairwise_sweep(dpts, dpts, core_d, root,
+                                      jnp.float32(eps2), backend=backend)
+            p2, changed = _hook_step(root, m, core_d)
+            return p2, changed, it + 1
+
+        parent, _, _ = jax.lax.while_loop(
+            cond, body, (iota, jnp.bool_(True), jnp.int32(0)))
+        root = pointer_jump(parent)
+
+        # per component: min corpus anchor over core members, else a fresh
+        # deterministic cluster id (n_corpus + min delta index of a core)
+        anchor_comp = jnp.full((D,), INT_MAX, jnp.int32).at[root].min(
+            jnp.where(core_d, anchor, INT_MAX))
+        comp_min = jnp.full((D,), INT_MAX, jnp.int32).at[root].min(
+            jnp.where(core_d, iota, INT_MAX))
+        label_core = jnp.where(anchor_comp[root] != INT_MAX,
+                               anchor_comp[root],
+                               jnp.int32(n_corpus) + comp_min[root])
+        # border attachment: min over (delta core neighbors' final labels,
+        # corpus core neighbors' labels); neither in range -> noise
+        _, m2 = ops.pairwise_sweep(dpts, dpts, core_d, label_core,
+                                   jnp.float32(eps2), backend=backend)
+        border = jnp.minimum(m2, anchor)
+        labels = jnp.where(core_d, label_core,
+                           jnp.where(border != INT_MAX, border, -1))
+        return (jnp.where(valid, labels, -1).astype(jnp.int32), counts,
+                core_d, overflow)
+
+    return label
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """Stateful serving wrapper: frozen snapshot + delta buffer + buckets.
+
+    ``max_delta_frac`` is the compaction policy: the delta may grow to this
+    fraction of the corpus before a full re-cluster folds it in (bounded
+    staleness of the frozen half). ``delta_capacity`` hard-bounds delta
+    memory regardless of corpus size. ``ckpt_dir`` (optional) republishes
+    each compacted snapshot through the atomic checkpoint machinery with a
+    bumped step.
+    """
+    snapshot: ClusterSnapshot
+    max_delta_frac: float = 0.25
+    delta_capacity: int = 1 << 14
+    scheduler: BucketScheduler | None = None
+    backend: str | None = None
+    block_q: int = 256
+    ckpt_dir: str | None = None
+
+    def __post_init__(self):
+        if self.scheduler is None:
+            self.scheduler = BucketScheduler(min_bucket=self.block_q)
+        if self.scheduler.min_bucket % self.block_q:
+            raise ValueError(
+                f"scheduler min_bucket={self.scheduler.min_bucket} must be "
+                f"a multiple of block_q={self.block_q} (every bucket in the "
+                "power-of-two ladder is then a whole number of query tiles)")
+        self._delta = np.zeros((0, 3), np.float32)
+        self._step = 0
+        self.n_compactions = 0
+
+    # --- queries -----------------------------------------------------------
+
+    def assign(self, queries) -> AssignResult:
+        """DBSCAN-predict against the frozen snapshot (delta points become
+        visible to queries at the next compaction)."""
+        return assign(self.snapshot, queries, scheduler=self.scheduler,
+                      block_q=self.block_q, backend=self.backend)
+
+    # --- ingest ------------------------------------------------------------
+
+    @property
+    def n_delta(self) -> int:
+        return len(self._delta)
+
+    def _compaction_due(self) -> bool:
+        return (self.n_delta >= self.delta_capacity
+                or self.n_delta >= self.max_delta_frac * self.snapshot.n)
+
+    def ingest(self, chunk) -> IngestResult:
+        """Append ``chunk`` (m, 3) and label it online (module docstring).
+
+        Returns the chunk's labels; earlier delta points may silently
+        re-label as later arrivals densify their neighborhoods — readers
+        that care should re-``assign``.
+        """
+        chunk = np.asarray(chunk, np.float32)
+        if chunk.ndim != 2 or chunk.shape[1] != 3:
+            raise ValueError(f"chunk must be (m, 3), got {chunk.shape}")
+        if len(chunk) > self.delta_capacity:
+            raise ValueError(
+                f"chunk of {len(chunk)} exceeds delta_capacity="
+                f"{self.delta_capacity}; split it or raise the capacity")
+        d0 = self.n_delta
+        self._delta = np.concatenate([self._delta, chunk])
+        d1 = self.n_delta
+        if self._compaction_due():
+            self.compact()
+            n_old = self.snapshot.n - d1
+            labels = np.asarray(self.snapshot.labels)[n_old + d0:n_old + d1]
+            return IngestResult(labels=labels.astype(np.int32),
+                                compacted=True, n_delta=0)
+        labels = self._label_delta()[d0:d1]
+        return IngestResult(labels=labels, compacted=False, n_delta=d1)
+
+    def _label_delta(self) -> np.ndarray:
+        d = self.n_delta
+        D = self.scheduler.bucket(d)
+        dpts = np.full((D, 3), BIG, np.float32)
+        dpts[:d] = self._delta
+        spec = self.snapshot.spec
+        eps2 = float(self.snapshot.eps) ** 2
+        slab = _slab_for(self.snapshot)  # shared with assign: a grown slab
+        #                                  sticks, no per-ingest re-regrow
+        while True:
+            fn = _delta_label_fn(spec, eps2, int(self.snapshot.min_pts),
+                                 self.snapshot.n, self.backend, slab,
+                                 self.block_q)
+            labels, _, _, overflow = fn(
+                self.snapshot.codes, self.snapshot.cands,
+                self.snapshot.croot_sorted, jnp.asarray(dpts), jnp.int32(d))
+            if not bool(overflow):
+                break
+            if slab >= spec.n_cand:
+                raise RuntimeError("delta cross-sweep slab overflow at "
+                                   f"slab={slab} (n_cand={spec.n_cand})")
+            slab = min(slab * 2, spec.n_cand)
+            _SLAB_CACHE[spec] = slab
+        return np.asarray(labels)[:d]
+
+    def compact(self) -> ClusterSnapshot:
+        """Fold the delta into a fresh snapshot via the ordinary batch path
+        (bit-identical to ``dbscan`` on the concatenated points — the
+        parity contract ingest's bounded staleness is measured against)."""
+        pts = np.concatenate([np.asarray(self.snapshot.points),
+                              self._delta])
+        self.snapshot = build_snapshot(
+            pts, self.snapshot.eps, self.snapshot.min_pts,
+            engine=self.snapshot.engine, backend=self.backend)
+        self._delta = np.zeros((0, 3), np.float32)
+        self.n_compactions += 1
+        self._step += 1
+        if self.ckpt_dir is not None:
+            save_snapshot(self.snapshot, self.ckpt_dir, step=self._step)
+        return self.snapshot

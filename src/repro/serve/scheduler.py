@@ -1,0 +1,112 @@
+"""Microbatch shape scheduler: bucketed padding for a warm jit cache.
+
+A serving frontend sees request batches of every size; tracing one XLA
+program per size would melt the compile cache (and the p99). The scheduler
+quantizes batch sizes to a small fixed ladder of power-of-two *buckets* —
+each bucket is one compiled program, the live count travels as a dynamic
+scalar, and padded rows sit at +BIG where they can never hit a finite
+corpus point. After one warmup pass over the ladder, a stream of arbitrary
+batch sizes triggers **zero** recompiles (the ``bench_serve`` acceptance
+gate); the cost is bounded padding waste (< 2x rows, and padded lanes are
+masked out of the slab walk entirely, so they cost no candidate work).
+
+The scheduler also owns the serving telemetry: per-call latencies (p50/p99
+come from here, over a bounded window), calls, and the *recompile count* —
+an unseen trace key (snapshot plan + bucket + slab + block_q + backend, as
+built by the assign path) is exactly a fresh trace of the cross-query
+program, so counting unseen keys counts compiles without hooking XLA; a
+scheduler shared across snapshots stays honest because the plan is part of
+the key, and regrow retries note their intermediate traces too.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import numpy as np
+
+BIG = 1e30
+
+
+@dataclasses.dataclass
+class BucketScheduler:
+    """Shape buckets + serving stats (see module docstring).
+
+    ``min_bucket`` must be a multiple of the cross-query tile (block_q);
+    the default matches the kernel default. ``max_bucket`` bounds a single
+    device program — larger requests should be split upstream.
+    """
+    min_bucket: int = 256
+    max_bucket: int = 1 << 15
+    latency_window: int = 1 << 16  # bounded: long-lived loops must not leak
+
+    def __post_init__(self):
+        assert self.min_bucket > 0 and self.max_bucket >= self.min_bucket
+        self._seen_keys: set = set()
+        self.calls: int = 0
+        self.recompiles: int = 0
+        self._latencies = collections.deque(maxlen=self.latency_window)
+
+    # --- shape bucketing ---------------------------------------------------
+
+    def bucket(self, nq: int) -> int:
+        """Smallest power-of-two bucket holding ``nq`` queries."""
+        if nq > self.max_bucket:
+            raise ValueError(
+                f"batch of {nq} queries exceeds max_bucket="
+                f"{self.max_bucket}; split the request upstream")
+        b = self.min_bucket
+        while b < nq:
+            b <<= 1
+        return b
+
+    def buckets_upto(self, nq: int) -> list:
+        """The bucket ladder a warmup pass should trace, largest last."""
+        out = [self.min_bucket]
+        while out[-1] < min(nq, self.max_bucket):
+            out.append(out[-1] * 2)
+        return out
+
+    def pad(self, queries: np.ndarray) -> tuple:
+        """Pad ``queries`` (nq, 3) to its bucket with +BIG rows.
+
+        Returns (padded (B, 3) f32, nq). Padded rows are geometrically dead:
+        +BIG coordinates can never be within ε of a finite corpus point, and
+        the cross-query program additionally masks them out of the slab
+        windows by live count.
+        """
+        q = np.asarray(queries, np.float32)
+        assert q.ndim == 2 and q.shape[1] == 3, q.shape
+        nq = q.shape[0]
+        B = self.bucket(nq)
+        if B == nq:
+            return q, nq
+        pad = np.full((B - nq, 3), BIG, np.float32)
+        return np.concatenate([q, pad]), nq
+
+    # --- telemetry ---------------------------------------------------------
+
+    def note_trace(self, key) -> None:
+        """Record a trace key without a served call — regrow retries compile
+        intermediate programs that must not hide from the recompile count."""
+        if key not in self._seen_keys:
+            self._seen_keys.add(key)
+            self.recompiles += 1
+
+    def note_call(self, key, seconds: float) -> None:
+        """Record one served call under trace ``key``."""
+        self.note_trace(key)
+        self.calls += 1
+        self._latencies.append(seconds)
+
+    def reset_stats(self) -> None:
+        """Zero counters but *keep* the seen shape keys — the post-warmup
+        recompile count should report only genuinely new traces."""
+        self.calls = 0
+        self.recompiles = 0
+        self._latencies.clear()
+
+    def latency_percentiles(self, qs=(50, 99)) -> tuple:
+        if not self._latencies:
+            return tuple(float("nan") for _ in qs)
+        arr = np.asarray(self._latencies)
+        return tuple(float(np.percentile(arr, q)) for q in qs)

@@ -1,0 +1,180 @@
+"""Cluster snapshots: a built, labeled index frozen for online serving.
+
+The paper's §VI-B re-run use case already treats a built index as worth
+more than one clustering pass; RT-kNNS Unbound generalizes the same RT
+index to arbitrary query sets. A :class:`ClusterSnapshot` is that object
+for this codebase (DESIGN.md §10): the cell-sorted CSR layout of a
+clustered corpus plus its DBSCAN outputs, packaged as one pytree so it can
+
+  * answer cross-corpus queries (``serve.assign`` — the ``cross_sweep``
+    kernel walks the frozen slabs),
+  * absorb streamed points (``serve.ServeSession.ingest``), and
+  * survive process death: save/load goes through the
+    ``distributed/checkpoint`` atomic-rename machinery, so a crash
+    mid-write can never corrupt a published snapshot and the newest
+    complete one wins on load.
+
+Array fields are pytree children (jit-traceable); the static plan
+(:class:`~repro.core.grid.CSRGridSpec`), the engine name, and the
+clustering parameters ride in the aux data, so a snapshot passed through
+``jax.jit`` retraces only when the *plan* changes, never per batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import engines
+from ..core import grid as grid_mod
+from ..core import neighbors as nb
+from ..core.dbscan import dbscan
+from ..distributed import checkpoint as ckpt
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+SNAPSHOT_FORMAT = 1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ClusterSnapshot:
+    """A frozen, clustered, queryable index (pytree; see module docstring).
+
+    Layout invariant: ``cands``/``codes``/``croot_sorted`` are in Morton-
+    sorted order (position s = s-th smallest cell code); ``points`` /
+    ``labels`` / ``core`` / ``counts`` are in original corpus order with
+    ``order`` mapping sorted position -> original index.
+    """
+    points: Any        # (n, 3) f32 corpus, original order
+    labels: Any        # (n,) i32 cluster labels (min core index), -1 noise
+    core: Any          # (n,) bool
+    counts: Any        # (n,) i32 stage-1 ε-neighbor counts (§VI-B reuse)
+    order: Any         # (n,) i32 sorted position -> original index
+    cands: Any         # (3, n_cand) f32 cell-sorted planar corpus, +BIG pad
+    codes: Any         # (n,) i32 sorted Morton cell codes (bisect target)
+    croot_sorted: Any  # (n_cand,) i32 label if core else INT32_MAX (sorted)
+    spec: grid_mod.CSRGridSpec  # static plan (aux)
+    engine: str = "grid"
+    eps: float = 0.0
+    min_pts: int = 0
+
+    def tree_flatten(self):
+        children = (self.points, self.labels, self.core, self.counts,
+                    self.order, self.cands, self.codes, self.croot_sorted)
+        return children, (self.spec, self.engine, self.eps, self.min_pts)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        spec, engine, eps, min_pts = aux
+        return cls(*children, spec=spec, engine=engine, eps=eps,
+                   min_pts=min_pts)
+
+    @property
+    def n(self) -> int:
+        return self.spec.n
+
+    def n_clusters(self) -> int:
+        lab = np.asarray(self.labels)
+        return int(np.unique(lab[lab >= 0]).size)
+
+
+def build_snapshot(points, eps: float, min_pts: int, *,
+                   engine: str = "grid", backend: str | None = None,
+                   spec=None) -> ClusterSnapshot:
+    """Cluster ``points`` and freeze the result for serving.
+
+    The engine is vetted through the registry *before* its build runs: only
+    engines advertising the ``query`` capability (EngineSpec.capabilities)
+    can answer cross-corpus queries, and rejecting a mismatch here costs a
+    dict lookup instead of a full structure build.
+    """
+    entry = engines.get_engine_spec(engine)
+    if "query" not in entry.capabilities:
+        raise ValueError(
+            f"engine {engine!r} does not provide the cross-corpus 'query' "
+            "capability required for serving; registered engines that do: "
+            + ", ".join(sorted(
+                n for n in engines.available_engines()
+                if "query" in engines.get_engine_spec(n).capabilities)))
+    points = jnp.asarray(points, jnp.float32)
+    eng = nb.make_engine(points, eps, engine=engine, backend=backend,
+                         spec=spec)
+    res = dbscan(points, eps, min_pts, eng=eng, backend=backend)
+    g = eng.state  # CSRGrid: the frozen sorted layout
+    cspec: grid_mod.CSRGridSpec = eng.meta
+    n = cspec.n
+    labels_s = res.labels[g.order]
+    core_s = res.core[g.order]
+    croot_sorted = jnp.full((cspec.n_cand,), INT_MAX, jnp.int32) \
+        .at[:n].set(jnp.where(core_s, labels_s, INT_MAX).astype(jnp.int32))
+    return ClusterSnapshot(
+        points=points, labels=res.labels, core=res.core, counts=res.counts,
+        order=g.order, cands=g.cands, codes=g.codes,
+        croot_sorted=croot_sorted, spec=cspec, engine=engine,
+        eps=float(eps), min_pts=int(min_pts))
+
+
+def _spec_to_meta(spec: grid_mod.CSRGridSpec) -> dict:
+    d = dataclasses.asdict(spec)
+    d["origin"] = list(d["origin"])
+    return d
+
+
+def _spec_from_meta(d: dict) -> grid_mod.CSRGridSpec:
+    d = dict(d)
+    d["origin"] = tuple(float(v) for v in d["origin"])
+    return grid_mod.CSRGridSpec(**d)
+
+
+def save_snapshot(snapshot: ClusterSnapshot, ckpt_dir: str, *,
+                  step: int = 0, keep: int = 3) -> str:
+    """Publish a snapshot atomically (checkpoint machinery: tmp dir +
+    rename, keep-K gc). ``step`` versions successive snapshots — ingest
+    compactions bump it, and the newest complete one wins on load."""
+    meta = {
+        "kind": "cluster_snapshot",
+        "format": SNAPSHOT_FORMAT,
+        "engine": snapshot.engine,
+        "eps": snapshot.eps,
+        "min_pts": snapshot.min_pts,
+        "spec": _spec_to_meta(snapshot.spec),
+    }
+    return ckpt.save(ckpt_dir, step, snapshot, meta=meta, keep=keep)
+
+
+def load_snapshot(ckpt_dir: str, *, step: int | None = None) \
+        -> ClusterSnapshot:
+    """Load the newest complete snapshot (or a specific ``step``).
+
+    Incomplete ``*.tmp*`` leftovers from a crash mid-write are never
+    considered — the atomic-rename contract of the checkpoint layer.
+    """
+    if step is None:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no snapshots in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)["meta"]
+    if meta.get("kind") != "cluster_snapshot":
+        raise ValueError(f"{path} is not a cluster snapshot checkpoint")
+    if meta.get("format", 0) > SNAPSHOT_FORMAT:
+        raise ValueError(
+            f"snapshot format {meta['format']} is newer than this build "
+            f"supports ({SNAPSHOT_FORMAT})")
+    spec = _spec_from_meta(meta["spec"])
+    # skeleton with the right treedef/leaf count; restore fills the arrays
+    dummy = jnp.zeros((0,), jnp.int32)
+    skeleton = ClusterSnapshot(
+        points=dummy, labels=dummy, core=dummy, counts=dummy, order=dummy,
+        cands=dummy, codes=dummy, croot_sorted=dummy, spec=spec,
+        engine=meta["engine"], eps=float(meta["eps"]),
+        min_pts=int(meta["min_pts"]))
+    restored, _ = ckpt.restore(ckpt_dir, skeleton, step=step)
+    return jax.tree.map(jnp.asarray, restored)

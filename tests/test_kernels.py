@@ -79,6 +79,51 @@ def test_csr_sweep_shapes(T, block_q, nc_blocks, slab_blocks):
             (d2 <= 0.4).sum(1))
 
 
+@pytest.mark.parametrize("T,block_q,nc_blocks,slab_blocks",
+                         [(1, 8, 1, 1), (4, 64, 8, 3), (3, 256, 6, 6),
+                          (7, 32, 16, 2)])
+def test_cross_sweep_shapes(T, block_q, nc_blocks, slab_blocks):
+    # cross-corpus sweep: queries are NOT the candidates, and the payload
+    # plane is core labels — interpret-mode kernel vs oracle, exact on all
+    # three outputs (counts / minroot / mind2)
+    bk = 128
+    nc = nc_blocks * bk
+    slab = slab_blocks * bk
+    rng = np.random.default_rng(11)
+    q = rng.uniform(-1, 1, (T * block_q, 3)).astype(np.float32)
+    c = rng.uniform(-1, 1, (nc, 3)).astype(np.float32)
+    croot = rng.integers(0, 9999, nc).astype(np.int32)
+    croot[rng.uniform(size=nc) < 0.5] = np.iinfo(np.int32).max
+    starts = (rng.integers(0, nc_blocks - slab_blocks + 1, T) * bk) \
+        .astype(np.int32)
+    nblk = rng.integers(0, slab_blocks + 1, T).astype(np.int32)
+    args = (jnp.asarray(q), jnp.asarray(c.T), jnp.asarray(croot),
+            jnp.asarray(starts), jnp.asarray(nblk), 0.4)
+    a = ops.cross_sweep(*args, slab=slab, block_q=block_q, block_k=bk,
+                        backend="interpret")
+    r = ops.cross_sweep(*args, slab=slab, block_q=block_q, block_k=bk,
+                        backend="ref")
+    for aa, rr in zip(a, r):
+        np.testing.assert_array_equal(np.asarray(aa), np.asarray(rr))
+    # cross-check against direct numpy over each tile's live slab
+    INT_MAX = np.iinfo(np.int32).max
+    for t in range(T):
+        sl = slice(starts[t], starts[t] + nblk[t] * bk)
+        qq = q[t * block_q:(t + 1) * block_q]
+        d2 = ((qq[:, None] - c[None, sl]) ** 2).sum(-1)
+        hit = d2 <= 0.4
+        core_hit = hit & (croot[None, sl] != INT_MAX)
+        np.testing.assert_array_equal(
+            np.asarray(r[0])[t * block_q:(t + 1) * block_q], hit.sum(1))
+        exp_min = np.where(core_hit, croot[None, sl], INT_MAX) \
+            .min(1, initial=INT_MAX)
+        np.testing.assert_array_equal(
+            np.asarray(r[1])[t * block_q:(t + 1) * block_q], exp_min)
+        exp_d2 = np.where(core_hit, d2, np.inf).min(1, initial=np.inf)
+        got_d2 = np.asarray(r[2])[t * block_q:(t + 1) * block_q]
+        np.testing.assert_allclose(got_d2, exp_d2, rtol=1e-6)
+
+
 @pytest.mark.parametrize("f", [1, 5, 512, 700, 1025])
 def test_bvh_sweep_shapes(f):
     # wavefront expand step: interpret-mode kernel vs oracle, exact on all

@@ -1,0 +1,102 @@
+"""Data pipeline: the lazy ``point_stream`` feeder (ISSUE 4 satellite).
+
+Contract under test: chunks are generated lazily (O(chunk) memory, so each
+chunk is its own generator call), the stream is deterministic in
+(name, total, chunk, seed), seeds decorrelate streams, and the trailing
+remainder chunk carries exactly ``total % chunk`` points.
+"""
+import numpy as np
+
+from repro.data.pipeline import point_stream
+
+
+def test_chunk_sizes_and_remainder():
+    chunks = list(point_stream("taxi2d", 1050, 400, seed=0))
+    assert [len(c) for c in chunks] == [400, 400, 250]
+    total = np.concatenate(chunks)
+    assert total.shape == (1050, 3)
+    assert total.dtype == np.float32
+
+
+def test_exact_multiple_has_no_empty_tail():
+    chunks = list(point_stream("highway", 800, 200, seed=1))
+    assert [len(c) for c in chunks] == [200, 200, 200, 200]
+
+
+def test_deterministic_replay():
+    a = list(point_stream("roadnet2d", 900, 256, seed=7))
+    b = list(point_stream("roadnet2d", 900, 256, seed=7))
+    assert len(a) == len(b)
+    for ca, cb in zip(a, b):
+        np.testing.assert_array_equal(ca, cb)
+
+
+def test_seeds_decorrelate_streams_and_chunks():
+    a = np.concatenate(list(point_stream("taxi2d", 512, 256, seed=0)))
+    b = np.concatenate(list(point_stream("taxi2d", 512, 256, seed=1)))
+    assert not np.array_equal(a, b)
+    # successive chunks of one stream differ too (per-chunk seeds)
+    c0, c1 = list(point_stream("taxi2d", 512, 256, seed=0))
+    assert not np.array_equal(c0, c1)
+
+
+def test_lazy_generation_is_o_chunk():
+    """The generator must not materialize ``total`` points up front: pulling
+    one chunk of a (deliberately huge) stream calls the dataset generator
+    with the *chunk* size only."""
+    from repro.data import synth
+    calls = []
+    orig = synth.load
+
+    def spy(name, n, seed=0, **kw):
+        calls.append(n)
+        return orig(name, n, seed=seed, **kw)
+
+    synth.load = spy
+    try:
+        it = point_stream("highway", 10_000_000, 128, seed=3)
+        first = next(it)
+    finally:
+        synth.load = orig
+    assert len(first) == 128
+    assert calls == [128]  # not [10_000_000]
+
+
+def test_chunks_share_one_world():
+    """Per-chunk seeds must vary only the *samples*: the dataset's global
+    structure (taxi hub layout) is pinned to the stream seed, so chunks
+    sample the same distribution as a corpus built with that seed."""
+    from repro.data import synth
+    corpus = synth.load("taxi2d", 2000, seed=0)
+
+    def chamfer(a, b):  # mean nearest-neighbor distance a -> b
+        d2 = ((a[:, None, :2] - b[None, :, :2]) ** 2).sum(-1)
+        return float(np.sqrt(d2.min(1)).mean())
+
+    same_world = np.concatenate(
+        list(point_stream("taxi2d", 600, 200, seed=0)))
+    other_world = np.concatenate(
+        list(point_stream("taxi2d", 600, 200, seed=123)))
+    # deterministic inputs -> deterministic margin: samples of the corpus's
+    # own hub layout hug it far tighter than samples of a redrawn layout
+    assert chamfer(same_world, corpus) < 0.5 * chamfer(other_world, corpus)
+
+
+def test_structure_seed_default_is_bit_compatible():
+    from repro.data import synth
+    for name in ("taxi2d", "roadnet2d", "highway", "iono3d", "skewed2d"):
+        a = synth.load(name, 500, seed=3)
+        b = synth.load(name, 500, seed=3, structure_seed=None)
+        np.testing.assert_array_equal(a, b)
+    # an explicit structure_seed decouples the sample stream from the
+    # structure draw, so the points differ from the single-RNG layout even
+    # when both seeds are equal (samples restart at the stream's origin)
+    d = synth.load("taxi2d", 500, seed=3)
+    c = synth.load("taxi2d", 500, seed=3, structure_seed=3)
+    assert not np.array_equal(d, c)
+
+
+def test_empty_and_degenerate():
+    assert list(point_stream("taxi2d", 0, 64)) == []
+    only = list(point_stream("taxi2d", 3, 64, seed=2))
+    assert len(only) == 1 and only[0].shape == (3, 3)

@@ -1,0 +1,211 @@
+"""Serving subsystem (DESIGN.md §10): snapshot round-trip, predict parity,
+ingest/compaction parity, and shape-bucket scheduling.
+
+Acceptance bar (ISSUE 4): for every dataset in the parity suite,
+``ingest``-then-compact labels are bit-identical to ``dbscan()`` on the
+concatenated points; ``assign`` matches the brute-force predict oracle;
+snapshot save -> load -> ``assign`` is label-identical, including with a
+crash-mid-write tmp leftover in the checkpoint dir.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.core import engines
+from repro.core.dbscan import dbscan
+from repro.data import synth
+
+INT_MAX = np.iinfo(np.int32).max
+
+EPS, MINPTS = 0.05, 8
+
+
+def _parity_cases():
+    """The parity suite of the existing engine tests (skewed2d, duplicates,
+    n=2, all-noise) plus a generic blob mixture."""
+    rng = np.random.default_rng(0)
+    base = rng.uniform(0, 1, (80, 3)).astype(np.float32)
+    dup = np.concatenate([base, base, base[:30]])
+    spread = (rng.uniform(0, 100, (60, 3)) * np.array([1, 1, 0])) \
+        .astype(np.float32)  # pairwise distances >> eps: all noise
+    return {
+        "skewed2d": synth.load("skewed2d", 1200, seed=4),
+        "duplicates": dup,
+        "n2": np.asarray([[0., 0., 0.], [0.01, 0., 0.]], np.float32),
+        "all_noise": spread,
+        "blobs": synth.blobs(900, k=4, seed=1),
+    }
+
+
+def _predict_oracle(pts, labels, core, eps, q):
+    """Brute-force DBSCAN predict: min label over ε-reachable core points,
+    else noise; plus corpus neighbor counts and min core distance²."""
+    d2 = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    hit = d2 <= eps * eps
+    ch = hit & core[None, :]
+    lab = np.where(ch, labels[None, :], INT_MAX).min(1, initial=INT_MAX)
+    return (np.where(lab != INT_MAX, lab, -1),
+            hit.sum(1).astype(np.int32),
+            np.where(ch, d2, np.inf).min(1, initial=np.inf))
+
+
+@pytest.mark.parametrize("name", list(_parity_cases()))
+def test_assign_matches_predict_oracle(name):
+    pts = _parity_cases()[name]
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    rng = np.random.default_rng(5)
+    lo, hi = pts.min(0), pts.max(0)
+    q = rng.uniform(lo - 2 * EPS, hi + 2 * EPS, (137, 3)).astype(np.float32)
+    q[:, 2] = pts[0, 2] * 0  # stay planar like the corpus (z = 0 for 2D)
+    r = serve.assign(snap, q)
+    exp_lab, exp_cnt, exp_d2 = _predict_oracle(
+        pts, np.asarray(snap.labels), np.asarray(snap.core), EPS, q)
+    np.testing.assert_array_equal(r.labels, exp_lab)
+    np.testing.assert_array_equal(r.counts, exp_cnt)
+    np.testing.assert_allclose(r.dist, np.sqrt(exp_d2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", list(_parity_cases()))
+def test_ingest_then_compact_is_batch_identical(name):
+    pts = _parity_cases()[name]
+    n = len(pts)
+    half = max(n // 2, 1)
+    sess = serve.ServeSession(serve.build_snapshot(pts[:half], EPS, MINPTS),
+                              max_delta_frac=np.inf)
+    for i in range(half, n, 64):
+        res = sess.ingest(pts[i:i + 64])
+        assert res.labels.shape == (len(pts[i:i + 64]),)
+    sess.compact()
+    full = dbscan(pts, EPS, MINPTS, engine="grid")
+    np.testing.assert_array_equal(np.asarray(sess.snapshot.labels),
+                                  np.asarray(full.labels))
+    np.testing.assert_array_equal(np.asarray(sess.snapshot.core),
+                                  np.asarray(full.core))
+
+
+def test_online_labels_match_batch_when_no_corpus_drift():
+    """Between compactions the online labels are exact DBSCAN over
+    corpus ∪ delta whenever the delta doesn't retro-promote corpus points:
+    ingesting points far from the corpus must label them exactly as a
+    batch run of the concatenation does (up to the fresh-cluster ids,
+    which are n_corpus + min member index by construction)."""
+    corpus = synth.blobs(600, k=3, seed=7)
+    far = synth.blobs(200, k=2, seed=8) + np.asarray([50.0, 0.0, 0.0],
+                                                     np.float32)
+    sess = serve.ServeSession(serve.build_snapshot(corpus, EPS, MINPTS),
+                              max_delta_frac=np.inf)
+    got = sess.ingest(far).labels
+    full = np.asarray(dbscan(np.concatenate([corpus, far]), EPS, MINPTS,
+                             engine="grid").labels)[len(corpus):]
+    # same clusters, same noise; ids agree because fresh ids are
+    # n_corpus + min-member-index == the batch run's min core index
+    np.testing.assert_array_equal(got, full)
+
+
+def test_ingest_auto_compaction_threshold():
+    pts = synth.blobs(800, k=3, seed=9)
+    sess = serve.ServeSession(serve.build_snapshot(pts[:600], EPS, MINPTS),
+                              max_delta_frac=0.2)  # 120 points trigger
+    r1 = sess.ingest(pts[600:700])    # 100 < 120: buffered
+    assert not r1.compacted and sess.n_delta == 100
+    r2 = sess.ingest(pts[700:800])    # 200 >= 120: compacts
+    assert r2.compacted and sess.n_delta == 0
+    assert sess.snapshot.n == 800
+    full = dbscan(pts, EPS, MINPTS, engine="grid")
+    np.testing.assert_array_equal(np.asarray(sess.snapshot.labels),
+                                  np.asarray(full.labels))
+
+
+def test_snapshot_roundtrip_and_crash_leftover(tmp_path):
+    pts = synth.load("skewed2d", 1000, seed=3)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    d = str(tmp_path)
+    serve.save_snapshot(snap, d, step=1)
+    # simulate a crash mid-write: a stale tmp dir with partial contents
+    leftover = os.path.join(d, "step_0000000002.tmpXYZ")
+    os.makedirs(leftover)
+    with open(os.path.join(leftover, "arrays.npz"), "wb") as f:
+        f.write(b"partial garbage")
+    snap2 = serve.load_snapshot(d)   # must pick step 1, not the leftover
+    q = np.random.default_rng(6).uniform(0, 10, (64, 3)) \
+        .astype(np.float32)
+    q[:, 2] = 0
+    a = serve.assign(snap, q)
+    b = serve.assign(snap2, q)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(
+        np.asarray(snap2.labels), np.asarray(snap.labels))
+    assert snap2.spec == snap.spec
+    assert (snap2.eps, snap2.min_pts) == (snap.eps, snap.min_pts)
+
+
+def test_save_snapshot_versions_and_gc(tmp_path):
+    pts = synth.blobs(300, k=2, seed=10)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        serve.save_snapshot(snap, d, step=s, keep=2)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) == 2  # keep-K gc
+    assert serve.load_snapshot(d).n == 300
+
+
+def test_build_snapshot_rejects_engine_without_query_capability():
+    pts = synth.blobs(100, k=2, seed=11)
+    with pytest.raises(ValueError, match="query"):
+        serve.build_snapshot(pts, EPS, MINPTS, engine="bvh")
+    # the rejection is capability-driven, not name-driven
+    assert "query" in engines.get_engine_spec("grid").capabilities
+    assert "query" not in engines.get_engine_spec("bvh").capabilities
+
+
+def test_scheduler_buckets_and_recompile_tracking():
+    sched = serve.BucketScheduler(min_bucket=256, max_bucket=4096)
+    assert sched.bucket(1) == 256
+    assert sched.bucket(256) == 256
+    assert sched.bucket(257) == 512
+    assert sched.bucket(4096) == 4096
+    with pytest.raises(ValueError):
+        sched.bucket(4097)
+    q, nq = sched.pad(np.zeros((300, 3), np.float32))
+    assert q.shape == (512, 3) and nq == 300 and (q[300:] > 1e29).all()
+
+    pts = synth.blobs(700, k=3, seed=12)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    rng = np.random.default_rng(13)
+    # warmup: one call per bucket in the ladder
+    for b in sched.buckets_upto(1024):
+        serve.assign(snap, rng.uniform(0, 2, (b, 3)).astype(np.float32),
+                     scheduler=sched)
+    assert sched.recompiles == len(sched.buckets_upto(1024))
+    sched.reset_stats()
+    # stream of ragged sizes: every call must land on a warm bucket
+    for nq in (1, 7, 100, 255, 256, 300, 513, 777, 1000):
+        r = serve.assign(snap, rng.uniform(0, 2, (nq, 3))
+                         .astype(np.float32), scheduler=sched)
+        assert r.labels.shape == (nq,)
+    assert sched.recompiles == 0
+    assert sched.calls == 9
+    p50, p99 = sched.latency_percentiles()
+    assert np.isfinite(p50) and p99 >= p50
+
+
+def test_assign_queries_outside_corpus_domain():
+    """Queries left/right of the corpus extent clip into border cells; the
+    exact refine must still reject them unless genuinely within ε."""
+    pts = synth.blobs(400, k=2, seed=14)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    far = np.asarray([[-1e3, -1e3, 0], [1e3, 1e3, 0]], np.float32)
+    r = serve.assign(snap, far)
+    assert (r.labels == -1).all() and (r.counts == 0).all()
+    assert np.isinf(r.dist).all()
+    # a query just outside the bounding box but within ε of an edge point
+    edge = pts[np.argmax(pts[:, 0])]
+    near = (edge + np.asarray([EPS * 0.5, 0, 0], np.float32))[None, :]
+    exp_lab, exp_cnt, _ = _predict_oracle(
+        pts, np.asarray(snap.labels), np.asarray(snap.core), EPS, near)
+    rn = serve.assign(snap, near)
+    np.testing.assert_array_equal(rn.labels, exp_lab)
+    np.testing.assert_array_equal(rn.counts, exp_cnt)
