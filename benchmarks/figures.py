@@ -30,6 +30,12 @@ EPS = {
 MINPTS = {"roadnet2d": 8, "taxi2d": 16, "iono3d": 16, "highway": 16}
 
 
+def _frontier_hist(res) -> str:
+    """derived-field rendering of DBSCANResult.frontier_tiles (live rounds)."""
+    hist = np.asarray(res.frontier_tiles)
+    return "/".join(map(str, hist[hist >= 0].tolist()))
+
+
 def _run(system, pts, eps, minpts):
     if system == "rt":
         return lambda: dbscan(pts, eps, minpts, engine="grid")
@@ -220,8 +226,12 @@ def bench_engine_skew(full: bool = False):
     cand_csr = int(np.asarray(eng_csr.state.nblk).sum()) * \
         spec_c.block_k * spec_c.chunk
 
-    t_hash = timeit(_run("rt-hash", pts, eps, minpts))
-    t_csr = timeit(_run("rt", pts, eps, minpts))
+    # cluster time on the PREBUILT engines (build varies with host load —
+    # timing it inside the ratio made speedup_vs_hash swing 6x-18x run to
+    # run, which no regression tolerance can gate; the sweep-work ratio is
+    # the stable, structural claim)
+    t_hash = timeit(lambda: dbscan(pts, eps, minpts, eng=eng_hash))
+    t_csr = timeit(lambda: dbscan(pts, eps, minpts, eng=eng_csr))
     r.row(f"grid-hash@n={n}", t_hash,
           f"cand_pairs={cand_hash},table_slots={spec_h.table_size * spec_h.capacity}",
           engine="grid-hash")
@@ -231,25 +241,106 @@ def bench_engine_skew(full: bool = False):
           f"cand_ratio={cand_hash / max(cand_csr, 1):.1f}",
           engine="grid-csr")
 
-    # BVH traversal flavors: build once (timed — §V-D), cluster with the
-    # prebuilt engine so the sweep column isolates traversal cost.
+    # Frontier-compacted hooking (DESIGN.md §11): the skew case where the
+    # clump spans many ε-cells (deep merge chains) while the uniform
+    # background is all noise — stage-2 rounds should collapse onto the
+    # clump tiles. Cluster time isolates the drivers (engine prebuilt,
+    # build reported as its own row); the derived column carries the
+    # per-round swept-tile counts the frontier driver records.
+    n_f = 65_536 if full else 32_768
+    eps_f, minpts_f = 5e-5, 4
+    pts_f = synth.load("skewed2d", n_f, seed=10)
+    from repro.core import grid as grid_mod
+    spec_f = grid_mod.plan_csr_grid(np.asarray(pts_f), eps_f, dims=2,
+                                    chunk=64, block_k=128)
+    built = []
+    t_build_f = timeit(
+        lambda: built.append(nb.make_engine(pts_f, eps_f, engine="grid",
+                                            spec=spec_f)) or built[-1],
+        repeats=1)
+    eng_f = built[-1]
+    t_dev = timeit(lambda: dbscan(pts_f, eps_f, minpts_f, eng=eng_f,
+                                  hook_loop="device"))
+    got = []   # telemetry from the timed runs — no extra cluster pass
+    t_fro = timeit(lambda: got.append(dbscan(pts_f, eps_f, minpts_f,
+                                             eng=eng_f,
+                                             hook_loop="frontier"))
+                   or got[-1])
+    res_f = got[-1]
+    rounds_f = int(res_f.n_rounds)
+    r.row(f"grid-csr-build@n={n_f}", t_build_f,
+          f"tiles={spec_f.n_tiles},slab={spec_f.slab}", engine="grid-csr")
+    r.row(f"grid-csr-device@n={n_f}", t_dev,
+          f"rounds={rounds_f},tiles_per_round="
+          f"{'/'.join([str(spec_f.n_tiles)] * rounds_f)}",
+          engine="grid-csr")
+    r.row(f"grid-csr-frontier@n={n_f}", t_fro,
+          f"rounds={rounds_f},"
+          f"tiles_per_round={_frontier_hist(res_f)},"
+          f"total_tiles={spec_f.n_tiles},"
+          f"speedup_vs_device={t_dev / t_fro:.2f}",
+          engine="grid-csr-frontier")
+
+    # BVH traversal flavors: build once (timed — §V-D, its own row so the
+    # trajectory is machine-readable), cluster with the prebuilt engine so
+    # the sweep column isolates traversal cost. The wavefront build row is
+    # warm-cache by construction (timeit's warmup build populates the
+    # WavefrontSpec cache), which is the steady-state cost the spec-reuse
+    # machinery is for; cold calibration cost rides in derived.
     times = {}
     for name in ("bvh-stack", "bvh"):
         built = []
+        t_cold0 = time.perf_counter()
+        built.append(nb.make_engine(pts, eps, engine=name))
+        t_cold = time.perf_counter() - t_cold0
         t_build = timeit(
             lambda: built.append(nb.make_engine(pts, eps, engine=name))
             or built[-1], repeats=1)
         eng = built[-1]
         t_sweep = timeit(lambda: dbscan(pts, eps, minpts, eng=eng),
                          repeats=1)
-        times[name] = (t_build, t_sweep, eng)
-    tb_s, ts_s, _ = times["bvh-stack"]
-    tb_w, ts_w, eng_w = times["bvh"]
+        times[name] = (t_cold, t_build, t_sweep, eng)
+        r.row(f"{name}-build@n={n}", t_build, f"cold={t_cold:.4f}",
+              engine=name)
+    _, tb_s, ts_s, _ = times["bvh-stack"]
+    _, tb_w, ts_w, eng_w = times["bvh"]
     r.row(f"bvh-stack@n={n}", ts_s, f"build={tb_s:.4f}", engine="bvh-stack")
     r.row(f"bvh-wave@n={n}", ts_w,
           f"build={tb_w:.4f},frontier_cap={eng_w.meta.capacity},"
           f"speedup_vs_stack={ts_s / ts_w:.2f}",
           engine="bvh")
+    return r.rows
+
+
+def bench_frontier(full: bool = False):
+    """Frontier round driver (DESIGN.md §11) across workload shapes.
+
+    The skew headline lives in ``bench_engine_skew``; this figure tracks
+    the driver on ordinary corpora — the interesting numbers are the
+    per-round swept-tile counts (how fast the merge frontier drains) and
+    that the frontier driver never loses to the full re-sweep even when
+    rounds are few. Stage 1 runs the counts-only sweep in both cases, so
+    the delta is pure stage-2 + border behavior.
+    """
+    r = Reporter("bench_frontier")
+    n = 60_000 if full else 20_000
+    for ds in ("taxi2d", "roadnet2d"):
+        pts = synth.load(ds, n, seed=12)
+        eps, mp = EPS[ds], MINPTS[ds]
+        eng = nb.make_engine(pts, eps, engine="grid")
+        t_dev = timeit(lambda: dbscan(pts, eps, mp, eng=eng,
+                                      hook_loop="device"))
+        got = []
+        t_fro = timeit(lambda: got.append(dbscan(pts, eps, mp, eng=eng,
+                                                 hook_loop="frontier"))
+                       or got[-1])
+        res = got[-1]
+        r.row(f"{ds}@n={n}", t_fro,
+              f"device={t_dev:.4f},speedup_vs_device={t_dev / t_fro:.2f},"
+              f"rounds={int(res.n_rounds)},"
+              f"tiles_per_round={_frontier_hist(res)},"
+              f"total_tiles={eng.meta.n_tiles}",
+              engine="grid-csr-frontier")
     return r.rows
 
 
@@ -325,4 +416,4 @@ def bench_serve(full: bool = False):
 
 ALL_FIGS = [fig4_small_eps, fig5_eps, fig6_size, fig7_growth, fig8_dense,
             fig9_early_exit, fig10_breakdown, table_reuse, bench_engine_skew,
-            bench_serve]
+            bench_frontier, bench_serve]

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -356,17 +357,43 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+# Calibrated WavefrontSpecs by (n, eps, dims) -> (data fingerprint, spec):
+# the spec is payload-independent, so a later build over the *same data*
+# (matching fingerprint) can reuse it outright — zero probes — and a
+# same-shape build over different data needs only one certification probe
+# (falling back to recalibration from the cached capacity if it fails,
+# since similar shapes rarely need less). This is what makes repeated
+# builds (benchmark warmups, serve re-snapshots, minPts re-runs over a
+# fixed corpus) pay the probe/compile cost once.
+_SPEC_CACHE: dict = {}
+_PROBE_GROWTH = 4   # coarse probe schedule: each probed capacity is a new
+#                     compiled program, so grow 4x per probe and refine one
+#                     2x step back down once a capacity fits
+
+
+def _data_fingerprint(points) -> tuple:
+    """Exact identity for a point set: a content hash, not a lossy summary
+    — sweeps discard the overflow flag, so reusing a cached capacity on a
+    fingerprint collision would silently drop neighbors. One O(n) digest
+    pass, far below the probe traversal it replaces."""
+    p = np.ascontiguousarray(np.asarray(points))
+    return (p.shape, str(p.dtype), hashlib.sha1(p.tobytes()).hexdigest())
+
+
 def make_bvh_engine(points, eps: float, *, dims: int | None = None,
                     backend: str | None = None,
                     spec: WavefrontSpec | None = None) -> engines.Engine:
     """Build the wavefront BVH engine (engine="bvh").
 
-    Build = LBVH construction + frontier-capacity calibration: capacity is
-    doubled until one payload-free probe traversal fits, which (traversal
-    structure being payload-independent) guarantees every later sweep fits
-    too. Pass a previous ``Engine.meta`` as ``spec`` to collapse
-    calibration to a single certification probe on a re-run over the same
-    dataset (paper §V-D build amortization).
+    Build = LBVH construction + frontier-capacity calibration: capacity
+    grows by ``_PROBE_GROWTH`` until one payload-free probe traversal
+    fits, which (traversal structure being payload-independent) guarantees
+    every later sweep fits too. Each probed capacity is a distinct
+    compiled program, so probes — not the traversals — dominate cold build
+    time; the schedule is deliberately coarse and successful specs are
+    cached per (n, ε, dims) so same-shape rebuilds collapse to a single
+    certification probe. Pass a previous ``Engine.meta`` as ``spec`` to
+    force that collapse explicitly (paper §V-D build amortization).
     """
     from .neighbors import infer_dims
     points = jnp.asarray(points, jnp.float32)
@@ -391,20 +418,45 @@ def make_bvh_engine(points, eps: float, *, dims: int | None = None,
                 "overflows on this dataset — it was calibrated for "
                 "different points; rebuild without spec=")
     else:
-        tile = min(_WAVE_TILE, max(512, _round_up(n, 512)))
-        cap = max(_round_up(2 * n, tile), 2 * tile)
-        cap_max = max(4 * n * n, 1 << 20)
-        while True:
-            spec = WavefrontSpec(eps=float(eps), n=n, capacity=cap,
-                                 tile=tile, max_levels=MAX_LEVELS)
-            if not bool(_wave_fns(spec, backend)[2](state)):
-                break
-            if cap >= cap_max:
-                raise RuntimeError(
-                    f"wavefront frontier calibration diverged (capacity "
-                    f"{cap} still overflows for n={n}, eps={eps}) — the "
-                    "data/ε pair is denser than O(n²); use engine='brute'")
-            cap *= 2
+        cache_key = (n, float(eps), dims)
+        fp = _data_fingerprint(points)
+        cached_fp, cached = _SPEC_CACHE.get(cache_key, (None, None))
+        if cached is not None and cached_fp == fp:
+            spec = cached        # same data — calibrated result holds as-is
+        elif cached is not None and not bool(
+                _wave_fns(cached, backend)[2](state)):
+            spec = cached        # same shape, new data: one probe certified
+            _SPEC_CACHE[cache_key] = (fp, spec)
+        else:
+            tile = min(_WAVE_TILE, max(512, _round_up(n, 512)))
+            floor = max(_round_up(2 * n, tile), 2 * tile)
+            # restart from the cached capacity when certification failed —
+            # this data needs more, never less probing than its shape-twin
+            cap = max(floor, cached.capacity * _PROBE_GROWTH if cached else 0)
+            cap_max = max(4 * n * n, 1 << 20)
+            while True:
+                spec = WavefrontSpec(eps=float(eps), n=n, capacity=cap,
+                                     tile=tile, max_levels=MAX_LEVELS)
+                if not bool(_wave_fns(spec, backend)[2](state)):
+                    break
+                if cap >= cap_max:
+                    raise RuntimeError(
+                        f"wavefront frontier calibration diverged (capacity "
+                        f"{cap} still overflows for n={n}, eps={eps}) — the "
+                        "data/ε pair is denser than O(n²); use engine='brute'")
+                cap = min(cap * _PROBE_GROWTH, _round_up(cap_max, tile))
+            # the 4x schedule (and the restart boost) can overshoot; a
+            # capacity is storage on TPU but compaction-scatter *work* on
+            # the ref backend, so one refining probe claws a 2x back —
+            # skipped only when the accepted capacity already sits at the
+            # natural floor (no overshoot, and probes dominate cold build)
+            if cap > floor:
+                half = WavefrontSpec(eps=float(eps), n=n,
+                                     capacity=_round_up(cap // 2, tile),
+                                     tile=tile, max_levels=MAX_LEVELS)
+                if not bool(_wave_fns(half, backend)[2](state)):
+                    spec = half
+            _SPEC_CACHE[cache_key] = (fp, spec)
     sweep, sweep_sorted, _ = _wave_fns(spec, backend)
     return engines.Engine("bvh", state, sweep, meta=spec,
                           sweep_sorted=sweep_sorted, order=bvh.order)

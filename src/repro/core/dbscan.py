@@ -17,14 +17,17 @@ Two stages over one fused sweep primitive (DESIGN.md §2):
             core-neighbor root (deterministic refinement of the paper's
             race-winner semantics); no core neighbor ⇒ noise (−1).
 
-Round drivers (DESIGN.md §5): by default the hooking rounds run inside a
-``jax.lax.while_loop`` — one device program for all of stage 2, no host
-round-trip per round. For engines advertising the ``sweep_sorted``
+Round drivers (DESIGN.md §5, §11): by default the hooking rounds run
+inside a ``jax.lax.while_loop`` — one device program for all of stage 2,
+no host round-trip per round. For engines advertising the ``sweep_sorted``
 capability (CSR grid, wavefront BVH — the registry field gates this, not
 the engine name) the loop additionally runs in *sorted layout* (payloads
 stay sorted across rounds; original-order labels are reconstructed once at
-the end). ``hook_loop="host"`` opts back into the per-round Python loop —
-the distributed driver uses it as its checkpoint boundary.
+the end). ``hook_loop="frontier"`` further re-sweeps only the live tiles
+of each round for engines advertising ``sweep_frontier`` (bit-identical
+output, cost tracks the merge frontier — DESIGN.md §11).
+``hook_loop="host"`` opts back into the per-round Python loop — the
+distributed driver uses it as its checkpoint boundary.
 
 Labels are component-min core indices (identical across engines and
 drivers); ``labels.compact_labels`` maps them to 0..k−1 for reporting.
@@ -47,7 +50,14 @@ class DBSCANResult(NamedTuple):
     labels: jnp.ndarray      # (n,) int32: cluster root id, or -1 for noise
     core: jnp.ndarray        # (n,) bool
     counts: jnp.ndarray      # (n,) int32 ε-neighbor counts (incl. self)
-    n_rounds: int            # stage-2 hooking rounds executed
+    n_rounds: jnp.ndarray    # () int32 stage-2 hooking rounds executed.
+    #   A *device* scalar for the device/sorted/frontier drivers — calling
+    #   ``int(...)`` here would block async dispatch on every dbscan()
+    #   call, so conversion is the caller's (lazy) choice; the host-loop
+    #   driver returns a plain int. f-strings/comparisons work either way.
+    frontier_tiles: jnp.ndarray | None = None  # (max_rounds,) int32 live
+    #   tiles swept per hooking round (frontier driver only; -1 past
+    #   n_rounds) — the bench's per-round frontier telemetry
 
 
 def _hook_step(root, m, core):
@@ -129,6 +139,74 @@ def _sorted_stage1_fn(sweep_sorted):
 
 
 @functools.lru_cache(maxsize=64)
+def _counts_stage1_fn(sweep_counts):
+    """Stage 1 through the counts-only sweep (no payload plane at all)."""
+    @jax.jit
+    def stage1(state, order):
+        n = order.shape[0]
+        counts_s = sweep_counts(state)
+        return jnp.zeros((n,), jnp.int32).at[order].set(counts_s)
+    return stage1
+
+
+@functools.lru_cache(maxsize=64)
+def _frontier_driver_fn(frontier, max_rounds: int):
+    """Frontier-compacted stage 2 for engines advertising ``sweep_frontier``
+    (DESIGN.md §11).
+
+    Same fixpoint as the sorted driver, but each round re-sweeps only the
+    tiles that can still produce a *new* union — pending (payload changed
+    in the slab since the tile's last sweep) ∧ live-seam (slab min core
+    root below some core query's root). Parked tiles yield INT32_MAX
+    min-roots, whose hook is the same no-op the full sweep would have
+    produced, so labels AND round count are bit-identical to the
+    device/host drivers while round 2..k cost tracks the live merge
+    frontier instead of n.
+    """
+    @jax.jit
+    def run(state, order, core):
+        n = order.shape[0]
+        core_s = core[order]
+        parent0 = jnp.arange(n, dtype=jnp.int32)
+
+        def cond(carry):
+            _, _, _, changed, it, _ = carry
+            return jnp.logical_and(changed, it < max_rounds)
+
+        def body(carry):
+            parent, prev_croot, pending, _, it, hist = carry
+            root = pointer_jump(parent)
+            croot = jnp.where(core_s, root, INT_MAX)
+            qroot = jnp.where(core_s, root, -1)
+            m, pending, n_live = frontier.sweep(
+                state, croot, qroot, croot != prev_croot, pending)
+            hist = hist.at[it].set(n_live)
+            p2, changed = _hook_step(root, m, core_s)
+            return p2, croot, pending, changed, it + 1, hist
+
+        carry0 = (parent0, jnp.full((n,), -1, jnp.int32),
+                  jnp.ones((frontier.n_tiles,), bool), jnp.bool_(True),
+                  jnp.int32(0), jnp.full((max_rounds,), -1, jnp.int32))
+        parent, _, _, _, n_rounds, hist = jax.lax.while_loop(
+            cond, body, carry0)
+        root = pointer_jump(parent)
+
+        # identical label reconstruction to the sorted driver …
+        comp_min = jnp.full((n,), INT_MAX, jnp.int32).at[root].min(
+            jnp.where(core_s, order, INT_MAX))
+        core_label = comp_min[root]
+        croot = jnp.where(core_s, core_label, INT_MAX)
+        # … but the border sweep also skips tiles whose minroot nobody
+        # reads (core queries ignore it; coreless slabs can't produce one)
+        m = frontier.border(state, croot, core_s)
+        labels_s = jnp.where(core_s, core_label,
+                             jnp.where(m != INT_MAX, m, -1)).astype(jnp.int32)
+        labels = jnp.full((n,), -1, jnp.int32).at[order].set(labels_s)
+        return labels, n_rounds, hist
+    return run
+
+
+@functools.lru_cache(maxsize=64)
 def _sorted_driver_fn(sweep_sorted, max_rounds: int):
     """Sorted-layout stage 2 + border attachment for any engine advertising
     ``sweep_sorted`` (CSR grid, wavefront BVH — DESIGN.md §5, §9).
@@ -189,13 +267,17 @@ def dbscan(points, eps: float, min_pts: int, *, engine: str = "grid",
     brute/grid-hash sweeps; the CSR engine's tile size is part of its plan
     (build with ``make_engine(spec=plan_csr_grid(..., chunk=...))``).
 
-    ``hook_loop`` selects the stage-2 round driver (DESIGN.md §5):
+    ``hook_loop`` selects the stage-2 round driver (DESIGN.md §5, §11):
     ``"device"`` (default) runs all hooking rounds in one
-    ``jax.lax.while_loop`` program; ``"host"`` keeps the per-round Python
-    loop — a natural checkpoint boundary, which is why the distributed
-    driver opts into it at its restart granularity.
+    ``jax.lax.while_loop`` program; ``"frontier"`` additionally re-sweeps
+    only the tiles that can still produce a union each round (engines
+    advertising ``sweep_frontier`` — bit-identical labels and round count,
+    round 2..k cost tracks the live merge frontier; engines without the
+    capability fall back to the plain device driver); ``"host"`` keeps the
+    per-round Python loop — a natural checkpoint boundary, which is why
+    the distributed driver opts into it at its restart granularity.
     """
-    if hook_loop not in ("device", "host"):
+    if hook_loop not in ("device", "host", "frontier"):
         raise ValueError(f"unknown hook_loop {hook_loop!r}")
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
@@ -203,19 +285,27 @@ def dbscan(points, eps: float, min_pts: int, *, engine: str = "grid",
         eng = nb.make_engine(points, eps, engine=engine, backend=backend,
                              chunk=chunk)
 
-    # --- sorted-layout fast path (capability-gated, not name-gated):
+    # --- sorted-layout fast paths (capability-gated, not name-gated):
     # engines advertising ``sweep_sorted`` keep payloads in sorted layout
-    # across rounds (CSR grid, wavefront BVH). ---
-    if eng.sweep_sorted is not None and hook_loop == "device":
+    # across rounds (CSR grid, wavefront BVH); ``sweep_frontier`` engines
+    # can additionally run the frontier-compacted round driver. ---
+    if eng.sweep_sorted is not None and hook_loop in ("device", "frontier"):
         if precomputed_counts is not None:
             counts = jnp.asarray(precomputed_counts, jnp.int32)
+        elif eng.sweep_counts is not None:
+            counts = _counts_stage1_fn(eng.sweep_counts)(eng.state, eng.order)
         else:
             counts = _sorted_stage1_fn(eng.sweep_sorted)(eng.state, eng.order)
         core = counts >= jnp.int32(min_pts)
+        if hook_loop == "frontier" and eng.sweep_frontier is not None:
+            labels, n_rounds, hist = _frontier_driver_fn(
+                eng.sweep_frontier, max_rounds)(eng.state, eng.order, core)
+            return DBSCANResult(labels=labels, core=core, counts=counts,
+                                n_rounds=n_rounds, frontier_tiles=hist)
         labels, n_rounds = _sorted_driver_fn(eng.sweep_sorted, max_rounds)(
             eng.state, eng.order, core)
         return DBSCANResult(labels=labels, core=core, counts=counts,
-                            n_rounds=int(n_rounds))
+                            n_rounds=n_rounds)
 
     # Stage 1 — core identification.
     if precomputed_counts is not None:
@@ -225,10 +315,9 @@ def dbscan(points, eps: float, min_pts: int, *, engine: str = "grid",
     core = counts >= jnp.int32(min_pts)
 
     # Stage 2 — hooking rounds.
-    if hook_loop == "device":
-        parent, n_rounds_dev = _device_loop_fn(eng.sweep, max_rounds)(
+    if hook_loop in ("device", "frontier"):
+        parent, n_rounds = _device_loop_fn(eng.sweep, max_rounds)(
             eng.state, core)
-        n_rounds = int(n_rounds_dev)
     else:
         # Host loop: host-visible round count and a natural checkpoint
         # boundary for the distributed driver.

@@ -19,6 +19,12 @@ do through the fields of the :class:`Engine` it builds:
                        structure — the serving subsystem refuses engines
                        whose ``EngineSpec.capabilities`` lack it *before*
                        paying for a build;
+  * ``sweep_counts`` — optional counts-only stage-1 sweep in sorted layout
+                       (skips the payload plane the stage discards);
+  * ``sweep_frontier`` — optional frontier-compacted stage-2 rounds
+                       (DESIGN.md §11): a :class:`FrontierPlan` that lets
+                       ``dbscan(hook_loop="frontier")`` re-sweep only the
+                       tiles that can still produce a union;
   * ``meta``         — the engine's static plan (GridSpec / CSRGridSpec /
                        WavefrontSpec), exposed for benchmarks and reuse;
   * ``timings``      — build-time breakdown (paper §V-D): ``make_engine``
@@ -43,6 +49,31 @@ import jax
 import jax.numpy as jnp
 
 
+class FrontierPlan(NamedTuple):
+    """The ``sweep_frontier`` capability (DESIGN.md §11): everything the
+    frontier round driver needs to re-sweep only the live tiles of a
+    hooking round.
+
+    ``n_tiles`` sizes the driver's pending-tile carry; the two callables
+    keep all layout knowledge (slab bounds, block math, compaction) inside
+    the engine:
+
+      * ``sweep(state, croot_s, qroot_s, changed_s, pending) ->
+        (minroot, pending', n_live)`` — one frontier round: fold
+        ``changed_s`` (payload changed since last round, sorted layout)
+        into ``pending``, intersect with the live-seam test, sweep exactly
+        the live tiles, clear them from ``pending``. Parked tiles return
+        INT32_MAX rows (a provable no-op for the hook — §11).
+      * ``border(state, croot_s, core_s) -> minroot`` — the final border-
+        attachment sweep, restricted to tiles that have both a core
+        candidate in the slab and a non-core query (the only consumers of
+        ``minroot`` there).
+    """
+    n_tiles: int
+    sweep: Callable
+    border: Callable
+
+
 class Engine(NamedTuple):
     """A built neighbor-search engine; fields double as capability flags."""
     name: str
@@ -58,6 +89,12 @@ class Engine(NamedTuple):
     #                                  DESIGN.md §10): (state, queries, nq,
     #                                  croot_sorted, slab=, block_q=) ->
     #                                  (counts, minroot, mind2, overflow)
+    sweep_counts: Callable | None = None  # (state) -> counts, sorted layout:
+    #                                  stage-1 core identification without
+    #                                  the payload plane (counts-only mode)
+    sweep_frontier: FrontierPlan | None = None  # frontier-compacted stage-2
+    #                                  rounds (DESIGN.md §11); presence opts
+    #                                  dbscan's hook_loop="frontier" in
 
 
 class EngineSpec(NamedTuple):

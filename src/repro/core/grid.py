@@ -64,6 +64,7 @@ class Grid(NamedTuple):
 
 
 BIG = 1e30
+INT32_MAX = np.iinfo(np.int32).max
 
 
 def _hash_cells(cx, cy, cz, table_size):
@@ -283,6 +284,58 @@ def tile_slabs(lo, hi, n: int, *, n_tiles: int, chunk: int, block_k: int,
     overflow = jnp.any(need > slab)
     nblk = jnp.clip((need + bk - 1) // bk, 0, slab // bk)
     return start.astype(jnp.int32), nblk.astype(jnp.int32), overflow
+
+
+def slab_payload_min(payload, starts, nblk, *, block_k: int,
+                     max_blocks: int):
+    """Per-tile min of ``payload`` over the tile's live slab blocks.
+
+    payload (n_cand,) int32 — sorted-layout plane (INT32_MAX padding);
+    returns (T,) int32. One block-granular reduce (reshape + min) plus a
+    static ``max_blocks`` gather loop — O(n_cand + T·max_blocks), far below
+    one sweep. Used by the frontier round driver's live-tile test
+    (DESIGN.md §11).
+    """
+    nb_tot = payload.shape[0] // block_k
+    blk_min = payload.reshape(nb_tot, block_k).min(axis=1)
+    starts_blk = (starts // block_k).astype(jnp.int32)
+    out = jnp.full(starts.shape, INT32_MAX, jnp.int32)
+    for j in range(max_blocks):
+        idx = jnp.clip(starts_blk + j, 0, nb_tot - 1)
+        out = jnp.where(j < nblk, jnp.minimum(out, blk_min[idx]), out)
+    return out
+
+
+def slab_touched(flags, starts, nblk, n: int, *, block_k: int):
+    """Per-tile "any flagged point in my slab" — the dirty-block test.
+
+    flags (n,) bool in sorted layout; returns (T,) bool. One prefix sum
+    over the point plane, then an O(T) two-gather range count per tile's
+    contiguous slab ``[starts, starts + nblk·block_k)`` — no new data
+    structure, the CSR plan's slab bounds are the ranges (DESIGN.md §11).
+    """
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                           jnp.cumsum(flags.astype(jnp.int32))])
+    lo = jnp.clip(starts, 0, n)
+    hi = jnp.clip(starts + nblk * block_k, 0, n)
+    return cum[hi] > cum[lo]
+
+
+def compact_tiles(live):
+    """Compact live tile ids to the front: (active (T,) int32, n_live ()).
+
+    Entries at positions >= n_live repeat the last live id (0 when none),
+    so a kernel walking ``active`` parks on resident blocks — the contract
+    ``kernels/frontier_sweep.py`` documents.
+    """
+    T = live.shape[0]
+    idx = jnp.arange(T, dtype=jnp.int32)
+    n_live = live.sum().astype(jnp.int32)
+    pos = jnp.cumsum(live.astype(jnp.int32)) - 1
+    active = jnp.zeros((T,), jnp.int32).at[
+        jnp.where(live, pos, T)].set(idx, mode="drop")
+    park = active[jnp.clip(n_live - 1, 0, T - 1)]
+    return jnp.where(idx < n_live, active, park), n_live
 
 
 def plan_csr_grid(points_np: np.ndarray, eps: float, *, dims: int = 3,

@@ -176,7 +176,94 @@ def _csr_sweep_fns(spec: grid_mod.CSRGridSpec, eps2: float,
     def sweep_sorted(state: grid_mod.CSRGrid, croot_sorted):
         return _call(state, croot_sorted)
 
-    return sweep, sweep_sorted
+    @jax.jit
+    def sweep_counts(state: grid_mod.CSRGrid):
+        counts_p = ops.csr_sweep_counts(
+            state.q_sorted, state.cands, state.starts, state.nblk,
+            jnp.float32(eps2), slab=spec.slab, backend=backend,
+            block_q=spec.chunk, block_k=spec.block_k)
+        return counts_p[:n]
+
+    return sweep, sweep_sorted, sweep_counts
+
+
+@functools.lru_cache(maxsize=64)
+def _csr_frontier_fns(spec: grid_mod.CSRGridSpec, eps2: float,
+                      backend: str | None):
+    """The ``sweep_frontier`` capability for the CSR engine (DESIGN.md §11).
+
+    Tile liveness is the intersection of two independently hook-safe tests:
+
+      * **pending** (dirty blocks): some candidate in the tile's slab
+        changed payload since the tile was last swept — a sticky flag, so
+        a tile parked by the seam test keeps remembering the change;
+      * **live seam**: the slab's min core root is below some core query's
+        root in the tile — the only configuration that can produce a
+        *new* union (otherwise every hook target equals the query's own
+        root and the scatter-min is a no-op).
+
+    Parked tiles return INT32_MAX min-root rows; their hook step is then
+    ``parent[root] min= root`` — exactly the no-op the full sweep would
+    have produced — so the union-find trajectory (and every label and the
+    round count) is bit-identical to the full re-sweep drivers.
+    """
+    n, bk, chunk = spec.n, spec.block_k, spec.chunk
+    T = spec.n_tiles
+    max_blocks = spec.slab // bk
+
+    def _pad_payload(croot_sorted):
+        return jnp.full((spec.n_cand,), INT_MAX, jnp.int32) \
+            .at[:n].set(croot_sorted)
+
+    def _pad_tile_rows(x, fill):
+        return jnp.full((T * chunk,), fill, x.dtype).at[:n].set(x)
+
+    def _compacted_to_sorted(minroot_c, active, n_live):
+        # slot i's rows belong to tile active[i]; dead slots drop
+        slot = jnp.arange(T, dtype=jnp.int32)
+        dst0 = jnp.where(slot < n_live, active * chunk, T * chunk)
+        dst = (dst0[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :])
+        return jnp.full((n,), INT_MAX, jnp.int32).at[
+            dst.reshape(-1)].set(minroot_c, mode="drop")
+
+    @jax.jit
+    def sweep(state: grid_mod.CSRGrid, croot_s, qroot_s, changed_s, pending):
+        pending = pending | grid_mod.slab_touched(
+            changed_s, state.starts, state.nblk, n, block_k=bk)
+        croot_pad = _pad_payload(croot_s)
+        slab_min = grid_mod.slab_payload_min(
+            croot_pad, state.starts, state.nblk, block_k=bk,
+            max_blocks=max_blocks)
+        qmax = _pad_tile_rows(qroot_s, jnp.int32(-1)) \
+            .reshape(T, chunk).max(axis=1)
+        live = pending & (slab_min < qmax)
+        active, n_live = grid_mod.compact_tiles(live)
+        minroot_c = ops.frontier_sweep(
+            state.q_sorted, state.cands, croot_pad, state.starts,
+            state.nblk, active, n_live, jnp.float32(eps2), slab=spec.slab,
+            backend=backend, block_q=chunk, block_k=bk)
+        return (_compacted_to_sorted(minroot_c, active, n_live),
+                pending & ~live, n_live)
+
+    @jax.jit
+    def border(state: grid_mod.CSRGrid, croot_s, core_s):
+        # minroot is consumed only by non-core queries, and only slabs with
+        # a core candidate can produce one != INT32_MAX
+        croot_pad = _pad_payload(croot_s)
+        slab_min = grid_mod.slab_payload_min(
+            croot_pad, state.starts, state.nblk, block_k=bk,
+            max_blocks=max_blocks)
+        has_noncore = _pad_tile_rows(~core_s, False) \
+            .reshape(T, chunk).any(axis=1)
+        live = has_noncore & (slab_min < INT_MAX)
+        active, n_live = grid_mod.compact_tiles(live)
+        minroot_c = ops.frontier_sweep(
+            state.q_sorted, state.cands, croot_pad, state.starts,
+            state.nblk, active, n_live, jnp.float32(eps2), slab=spec.slab,
+            backend=backend, block_q=chunk, block_k=bk)
+        return _compacted_to_sorted(minroot_c, active, n_live)
+
+    return engines.FrontierPlan(n_tiles=T, sweep=sweep, border=border)
 
 
 @functools.lru_cache(maxsize=64)
@@ -332,7 +419,7 @@ def _build_csr(points, eps, *, backend=None, chunk=2048, dims=None,
             "CSR grid build overflowed the planned slab capacity "
             f"(slab={spec.slab}) — the spec was planned for different "
             "data; re-plan with plan_csr_grid on this dataset")
-    fn, fn_sorted = _csr_sweep_fns(spec, eps2, backend)
+    fn, fn_sorted, fn_counts = _csr_sweep_fns(spec, eps2, backend)
 
     def query(state, q, nq, croot_sorted, *, slab=None, block_q=256):
         """Cross-corpus queries against this engine's frozen layout: q
@@ -345,7 +432,8 @@ def _build_csr(points, eps, *, backend=None, chunk=2048, dims=None,
 
     return Engine("grid", g, fn, meta=spec, sweep_sorted=fn_sorted,
                   order=g.order, neighbors=_csr_neighbors_fn(spec, eps2),
-                  query=query)
+                  query=query, sweep_counts=fn_counts,
+                  sweep_frontier=_csr_frontier_fns(spec, eps2, backend))
 
 
 def _build_grid_hash(points, eps, *, backend=None, chunk=2048, dims=None,
@@ -373,7 +461,8 @@ engines.register_engine(
 engines.register_engine(
     "grid", _build_csr,
     doc="cell-sorted CSR ε-grid; sorted-layout fast path (the default)",
-    capabilities=("neighbors", "sweep_sorted", "query"))
+    capabilities=("neighbors", "sweep_sorted", "query", "sweep_counts",
+                  "sweep_frontier"))
 engines.register_engine(
     "grid-hash", _build_grid_hash,
     doc="capacity-padded spatial-hash ε-grid (comparison baseline)",

@@ -22,6 +22,8 @@ from . import ref as _ref
 from .bvh_sweep import bvh_sweep as _bvh_kernel
 from .cross_sweep import cross_sweep as _cross_kernel
 from .csr_sweep import csr_sweep as _csr_kernel
+from .csr_sweep import csr_sweep_counts as _csr_counts_kernel
+from .frontier_sweep import frontier_sweep as _frontier_kernel
 from .gathered_sweep import gathered_sweep as _gathered_kernel
 from .morton import morton_encode as _morton_kernel
 from .pairwise_sweep import pairwise_sweep as _pairwise_kernel
@@ -140,6 +142,62 @@ def csr_sweep(queries, cands_planar, croot, starts, nblk, eps2, *,
                        starts_blk, nblk, eps2, max_blocks=max_blocks,
                        block_q=block_q, block_k=block_k,
                        interpret=(backend == "interpret"))
+
+
+def csr_sweep_counts(queries, cands_planar, starts, nblk, eps2, *,
+                     slab: int, backend=None, block_q: int = 256,
+                     block_k: int = 512):
+    """Counts-only CSR slab sweep (stage-1 core identification).
+
+    The static sibling of :func:`csr_sweep` for callers that discard the
+    payload half: no ``croot`` input (one less block DMA per grid step), no
+    ``minroot`` output, no min-root accumulation. Counts are bit-identical
+    to the full sweep's counts across backends.
+    """
+    backend = backend or default_backend()
+    assert slab % block_k == 0 and queries.shape[0] % block_q == 0
+    eps2 = jnp.asarray(eps2, jnp.float32)
+    starts_blk = (starts // block_k).astype(jnp.int32)
+    max_blocks = slab // block_k
+    if backend == "ref":
+        return _ref.csr_sweep_counts_ref(
+            queries.astype(jnp.float32), cands_planar, starts_blk, nblk,
+            eps2, max_blocks=max_blocks, block_k=block_k)
+    return _csr_counts_kernel(
+        queries.astype(jnp.float32), cands_planar, starts_blk, nblk, eps2,
+        max_blocks=max_blocks, block_q=block_q, block_k=block_k,
+        interpret=(backend == "interpret"))
+
+
+def frontier_sweep(queries, cands_planar, croot, starts, nblk, active,
+                   n_active, eps2, *, slab: int, backend=None,
+                   block_q: int = 256, block_k: int = 512):
+    """Frontier-compacted CSR slab ε-sweep (stage-2 rounds, DESIGN.md §11).
+
+    ``csr_sweep`` restricted to an active-tile index vector: slot ``i``
+    sweeps tile ``active[i]`` when ``i < n_active`` and is parked (no DMA,
+    no compute, INT32_MAX output) otherwise — cost tracks the live
+    frontier, not the tile count. ``active`` entries at or past
+    ``n_active`` must repeat the last live id (or 0 when none) so parked
+    steps revisit resident blocks. Returns the *compacted* minroot
+    (T·block_q,) int32; there is no counts output (hooking discards it).
+    """
+    backend = backend or default_backend()
+    assert slab % block_k == 0 and queries.shape[0] % block_q == 0
+    eps2 = jnp.asarray(eps2, jnp.float32)
+    starts_blk = (starts // block_k).astype(jnp.int32)
+    croot2 = croot.astype(jnp.int32)[None, :]
+    max_blocks = slab // block_k
+    n_active = jnp.asarray(n_active, jnp.int32).reshape(1)
+    if backend == "ref":
+        return _ref.frontier_sweep_ref(
+            queries.astype(jnp.float32), cands_planar, croot2, starts_blk,
+            nblk, active, n_active, eps2, max_blocks=max_blocks,
+            block_k=block_k)
+    return _frontier_kernel(
+        queries.astype(jnp.float32), cands_planar, croot2, starts_blk, nblk,
+        active, n_active, eps2, max_blocks=max_blocks, block_q=block_q,
+        block_k=block_k, interpret=(backend == "interpret"))
 
 
 def cross_sweep(queries, cands_planar, croot, starts, nblk, eps2, *,

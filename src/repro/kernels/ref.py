@@ -127,6 +127,93 @@ def csr_sweep_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
     return counts.reshape(-1), minroot.reshape(-1)
 
 
+def csr_sweep_counts_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
+                         starts_blk: jnp.ndarray, nblk: jnp.ndarray,
+                         eps2: jnp.ndarray, *, max_blocks: int,
+                         block_k: int):
+    """Counts-only slab sweep (stage-1): :func:`csr_sweep_ref` without the
+    payload plane or min-root accumulation. Counts are bit-identical to the
+    full sweep's counts output."""
+    T = starts_blk.shape[0]
+    block_q = queries.shape[0] // T
+
+    def tile(args):
+        qq, st, nb = args
+
+        def cond(carry):
+            b, _ = carry
+            return b < nb
+
+        def body(carry):
+            b, counts = carry
+            off = (st + b) * block_k
+            c = jax.lax.dynamic_slice(cands_planar, (0, off), (3, block_k))
+            d2 = _dist2(qq[:, None, :], jnp.moveaxis(c, 0, -1)[None, :, :])
+            counts = counts + (d2 <= eps2).sum(axis=1).astype(jnp.int32)
+            return b + jnp.int32(1), counts
+
+        _, counts = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), jnp.zeros((block_q,), jnp.int32)))
+        return counts
+
+    counts = jax.lax.map(tile, (queries.reshape(T, block_q, 3), starts_blk,
+                                nblk))
+    return counts.reshape(-1)
+
+
+def frontier_sweep_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
+                       croot: jnp.ndarray, starts_blk: jnp.ndarray,
+                       nblk: jnp.ndarray, active: jnp.ndarray,
+                       n_active: jnp.ndarray, eps2: jnp.ndarray, *,
+                       max_blocks: int, block_k: int):
+    """Frontier-compacted slab sweep (DESIGN.md §11): output slot ``i``
+    holds the min-root rows of query tile ``active[i]`` when
+    ``i < n_active``, INT32_MAX otherwise. Parked slots run a zero-trip
+    block walk, so CPU cost tracks the live frontier exactly like the
+    kernel's parked grid steps.
+
+    Semantics match the Pallas kernel exactly: a live slot visits the
+    ``nblk[active[i]]`` blocks of its tile's slab in order, accumulating the
+    same f32 distances — outputs are bit-identical across backends.
+    """
+    T = starts_blk.shape[0]
+    block_q = queries.shape[0] // T
+    queries = jnp.asarray(queries)
+    starts_blk = jnp.asarray(starts_blk)   # indexed by traced slot ids
+    nblk = jnp.asarray(nblk)
+    na = jnp.asarray(n_active).reshape(())
+
+    def slot(args):
+        i, t = args
+        qq = jax.lax.dynamic_slice(queries, (t * block_q, 0), (block_q, 3))
+        st = starts_blk[t]
+        nb = jnp.where(i < na, nblk[t], 0)
+
+        def cond(carry):
+            b, _ = carry
+            return b < nb
+
+        def body(carry):
+            b, minroot = carry
+            off = (st + b) * block_k
+            c = jax.lax.dynamic_slice(cands_planar, (0, off), (3, block_k))
+            r = jax.lax.dynamic_slice(croot, (0, off), (1, block_k))[0]
+            d2 = _dist2(qq[:, None, :], jnp.moveaxis(c, 0, -1)[None, :, :])
+            hit = d2 <= eps2
+            minroot = jnp.minimum(
+                minroot, jnp.where(hit, r[None, :], INT_MAX).min(axis=1))
+            return b + jnp.int32(1), minroot.astype(jnp.int32)
+
+        _, minroot = jax.lax.while_loop(
+            cond, body, (jnp.int32(0),
+                         jnp.full((block_q,), INT_MAX, jnp.int32)))
+        return minroot
+
+    minroot = jax.lax.map(
+        slot, (jnp.arange(T, dtype=jnp.int32), active.astype(jnp.int32)))
+    return minroot.reshape(-1)
+
+
 def cross_sweep_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
                     croot: jnp.ndarray, starts_blk: jnp.ndarray,
                     nblk: jnp.ndarray, eps2: jnp.ndarray, *,

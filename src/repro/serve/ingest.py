@@ -219,7 +219,11 @@ class ServeSession:
     def compact(self) -> ClusterSnapshot:
         """Fold the delta into a fresh snapshot via the ordinary batch path
         (bit-identical to ``dbscan`` on the concatenated points — the
-        parity contract ingest's bounded staleness is measured against)."""
+        parity contract ingest's bounded staleness is measured against).
+        The re-cluster runs under the frontier round driver (DESIGN.md
+        §11, via ``build_snapshot``): compaction is the serving path's
+        recurring full-cluster cost, and on a mostly-converged corpus the
+        frontier collapses its stage-2 rounds to the merge seams."""
         pts = np.concatenate([np.asarray(self.snapshot.points),
                               self._delta])
         self.snapshot = build_snapshot(

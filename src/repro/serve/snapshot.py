@@ -105,7 +105,12 @@ def build_snapshot(points, eps: float, min_pts: int, *,
     points = jnp.asarray(points, jnp.float32)
     eng = nb.make_engine(points, eps, engine=engine, backend=backend,
                          spec=spec)
-    res = dbscan(points, eps, min_pts, eng=eng, backend=backend)
+    # hook_loop="frontier": ingest compactions re-cluster the concatenated
+    # corpus through this call, so stage-2 rounds track the live merge
+    # frontier instead of n (bit-identical labels — DESIGN.md §11; engines
+    # without the capability fall back to the plain device driver)
+    res = dbscan(points, eps, min_pts, eng=eng, backend=backend,
+                 hook_loop="frontier")
     g = eng.state  # CSRGrid: the frozen sorted layout
     cspec: grid_mod.CSRGridSpec = eng.meta
     n = cspec.n
