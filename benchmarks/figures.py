@@ -411,6 +411,60 @@ def bench_serve(full: bool = False):
     r.row(f"ingest_chunk@n={n}", dt,
           f"pts_per_s={len(chunk) / dt:.0f},n_delta={sess.n_delta}",
           engine="grid")
+
+    # --- resilience envelope (DESIGN.md §12): serving under an injected
+    # compaction stall. The breaker trips on the first stalled rebuild;
+    # the stream then runs in degraded mode (last published snapshot,
+    # staleness flagged) and must keep the zero-recompile invariant.
+    from repro.serve import faults
+    from repro.serve.resilience import AdmissionQueue, CircuitBreaker
+
+    dsess = serve.ServeSession(
+        snap, max_delta_frac=1e-4, scheduler=sched,  # any ingest is "due"
+        breaker=CircuitBreaker(failure_threshold=1, reset_after_s=3600.0))
+    faults.inject("serve.compact", delay=0.05,
+                  error=RuntimeError("injected compaction stall"), times=-1)
+    try:
+        ri = dsess.ingest(chunk[:256])      # stalls, fails, trips breaker
+        assert ri.degraded and not ri.compacted
+        n_q = 0
+        t0 = time.perf_counter()
+        for _ in range(n_requests):
+            nq = int(rng.integers(1, 1024))
+            ra = dsess.assign(batch(nq))
+            assert ra.degraded and ra.staleness == 256
+            n_q += nq
+        dt = time.perf_counter() - t0
+        r.row(f"assign_degraded@n={n}", dt,
+              f"qps={n_q / dt:.0f},staleness={ra.staleness},"
+              f"breaker={dsess.breaker.state},"
+              f"recompiles={sched.recompiles}", engine="grid")
+        assert sched.recompiles == 0, \
+            f"degraded-mode stream retraced {sched.recompiles}x"
+
+        # admission shedding under a burst: 4x the queue depth arrives at
+        # once; the overflow is shed at submit with retry-after instead of
+        # melting p99 — shed-rate is deterministic (48/64)
+        bsess = serve.ServeSession(
+            snap, max_delta_frac=np.inf, scheduler=sched,
+            admission=AdmissionQueue(max_depth=16, max_age_s=60.0))
+        shed = 0
+        for _ in range(64):
+            try:
+                bsess.submit(batch(64))
+            except serve.AdmissionError:
+                shed += 1
+        t0 = time.perf_counter()
+        served = [x for x in bsess.pump()
+                  if isinstance(x[1], serve.AssignResult)]
+        dt = time.perf_counter() - t0
+        q = bsess.admission
+        r.row(f"admission_burst@n={n}", dt,
+              f"shed_rate={q.shed_rate():.2f},served={len(served)},"
+              f"shed={shed},max_depth={q.max_depth}", engine="grid")
+        assert shed == 48 and len(served) == 16
+    finally:
+        faults.clear()
     return r.rows
 
 

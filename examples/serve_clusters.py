@@ -60,3 +60,26 @@ print(f"assigned {n_q} queries in {dt:.2f}s — {n_q / dt:.0f} QPS sustained, "
 print(f"last batch: {(r.labels >= 0).mean():.0%} joined a cluster, "
       f"median core distance "
       f"{np.nanmedian(np.where(np.isinf(r.dist), np.nan, r.dist)):.4f}")
+
+# --- resilience: keep serving through a broken compaction ------------------
+# (DESIGN.md §12) inject one rebuild failure, watch the session degrade to
+# the last published snapshot instead of going down, then recover
+with serve.faults.inject("serve.compact", times=-1,
+                         error=RuntimeError("injected rebuild failure")):
+    ri = sess.ingest(synth.load("taxi2d", 256, seed=3))  # compaction due,
+    #                      rebuild fails -> online labels, delta kept
+    print(f"ingest under broken compaction: degraded={ri.degraded}, "
+          f"delta={ri.n_delta}")
+    try:
+        sess.compact()
+    except serve.CompactionError as e:
+        print(f"compaction failed ({e.code}), retry_after="
+              f"{e.retry_after:.1f}s — still serving")
+    r = sess.assign(q)                                # answers keep coming
+    print(f"degraded={r.degraded} staleness={r.staleness} "
+          f"(answers can't see the last {r.staleness} ingested points)")
+sess.compact(force=True)                              # operator-driven probe
+r = sess.assign(q)
+print(f"recovered: degraded={r.degraded} staleness={r.staleness}, "
+      f"breaker={sess.breaker.state}, shed so far: {sess.admission.shed}, "
+      f"slab regrows: {sess.scheduler.regrows}")

@@ -55,6 +55,15 @@ from .engines import Engine, make_engine  # re-export (public API)  # noqa: F401
 INT_MAX = jnp.iinfo(jnp.int32).max
 BIG = grid_mod.BIG
 
+# Canonical bound on every overflow → double-slab-and-retrace loop (serve
+# assign/ingest, distributed restarts): a slab doubles at most this many
+# times before the caller must raise a CapacityError naming the final
+# capacity instead of regrowing again. log2(n_cand/slab) doublings always
+# suffice structurally; the cap exists so a pathological query
+# distribution (or a fault-injected overflow flag) terminates with a
+# diagnosable error rather than an unbounded recompile storm.
+MAX_SLAB_REGROW = 8
+
 
 class GridState(NamedTuple):
     grid: grid_mod.Grid

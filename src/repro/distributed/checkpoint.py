@@ -64,12 +64,21 @@ def _gc(ckpt_dir: str, keep: int):
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def available_steps(ckpt_dir: str) -> list:
+    """Published step numbers, ascending. Only completed (atomically
+    renamed) step dirs count — ``*.tmp*`` crash leftovers never do. A
+    *published-then-damaged* step still appears here; readers that must
+    survive bit-rot walk this list newest-first and fall back (the
+    snapshot loader's posture, DESIGN.md §12.5)."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = sorted(d for d in os.listdir(ckpt_dir)
-                   if d.startswith("step_") and ".tmp" not in d)
-    return int(steps[-1].split("_")[1]) if steps else None
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and ".tmp" not in d)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore(ckpt_dir: str, tree_like, *, step: Optional[int] = None,

@@ -1,21 +1,35 @@
-"""Online clustering service over the engine registry (DESIGN.md §10).
+"""Online clustering service over the engine registry (DESIGN.md §10, §12).
 
 Batch clustering builds an index, labels the corpus, and discards both;
 serving keeps them: freeze a clustered index as a :class:`ClusterSnapshot`
-(atomic save/load), answer new-point queries with :func:`assign` (the
-``cross_sweep`` kernel, DBSCAN-predict semantics), and stream new points
-through :class:`ServeSession` (bounded delta buffer, parity-tested
-compaction). :class:`BucketScheduler` keeps a variable request stream on a
-warm jit cache via power-of-two shape buckets.
+(atomic save/load with corrupt-version fallback), answer new-point queries
+with :func:`assign` (the ``cross_sweep`` kernel, DBSCAN-predict semantics),
+and stream new points through :class:`ServeSession` (bounded delta buffer,
+parity-tested compaction). :class:`BucketScheduler` keeps a variable
+request stream on a warm jit cache via power-of-two shape buckets.
+
+The resilience envelope (``resilience.py``, ``faults.py``; DESIGN.md §12)
+wraps all of it: structured :class:`ServeError` taxonomy, input validation
+before quantization, a :class:`CircuitBreaker` around compaction, a
+bounded :class:`AdmissionQueue` shedding load explicitly, idempotent
+ingest via request ids, and a deterministic fault-injection harness that
+drives every degradation path in tests and benchmarks.
 """
 from .assign import AssignResult, assign  # noqa: F401
 from .ingest import IngestResult, ServeSession  # noqa: F401
+from .resilience import (AdmissionError, AdmissionQueue,  # noqa: F401
+                         CapacityError, CircuitBreaker, CompactionError,
+                         ServeError, SnapshotFormatError, ValidationError,
+                         validate_points)
 from .scheduler import BucketScheduler  # noqa: F401
 from .snapshot import (ClusterSnapshot, build_snapshot,  # noqa: F401
                        load_snapshot, save_snapshot)
+from . import faults  # noqa: F401
 
 __all__ = [
     "AssignResult", "assign", "IngestResult", "ServeSession",
     "BucketScheduler", "ClusterSnapshot", "build_snapshot", "load_snapshot",
-    "save_snapshot",
+    "save_snapshot", "ServeError", "ValidationError", "AdmissionError",
+    "CapacityError", "CompactionError", "SnapshotFormatError",
+    "CircuitBreaker", "AdmissionQueue", "validate_points", "faults",
 ]

@@ -8,13 +8,18 @@ point; with no core point in range it is noise (−1). Border/noise corpus
 points never attract queries (they don't define reachability), which is
 why the snapshot's payload plane carries ``label if core else INT32_MAX``.
 
-One call is one batched device program: bucket-pad (scheduler), quantize
-with the corpus plan, Morton-sort, bisect window bounds against the frozen
-sorted codes, and run the ``cross_sweep`` kernel over per-tile slabs. The
-per-tile slab capacity starts at the corpus plan's and regrows (double,
-retrace, retry — the same overflow posture as the distributed driver's
-capacities) in the rare case a query tile's window outgrows it; the grown
-value sticks for the snapshot so steady-state serving never regrows twice.
+One call is one batched device program: validate (NaN/Inf/shape/dtype are
+rejected *before* quantization — DESIGN.md §12.4), bucket-pad (scheduler),
+quantize with the corpus plan, Morton-sort, bisect window bounds against
+the frozen sorted codes, and run the ``cross_sweep`` kernel over per-tile
+slabs. The per-tile slab capacity starts at the corpus plan's and regrows
+(double, retrace, retry — the same overflow posture as the distributed
+driver's capacities) in the rare case a query tile's window outgrows it;
+the grown value sticks for the snapshot so steady-state serving never
+regrows twice. The regrow loop is bounded (``max_regrow``, default the
+engine-wide ``MAX_SLAB_REGROW``): exhaustion raises a structured
+:class:`~repro.serve.resilience.CapacityError` naming the final slab
+capacity, and every retry is surfaced in the scheduler's telemetry.
 """
 from __future__ import annotations
 
@@ -26,6 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import neighbors as nb
+from . import faults
+from .resilience import next_slab, validate_points
 from .scheduler import BucketScheduler
 from .snapshot import ClusterSnapshot
 
@@ -39,25 +46,17 @@ class AssignResult(NamedTuple):
     #                      point (+inf for noise) — attachment confidence
     bucket: int          # padded batch size served (telemetry)
     seconds: float       # device wall-clock for this call
-
-
-# grown slab capacities keyed by the snapshot's (hashable) plan; a regrow
-# sticks so steady-state serving pays it once, not per call. Keying by spec
-# rather than object identity means the entry survives reload of the same
-# snapshot and can never alias an unrelated one (a different corpus has a
-# different plan); at worst two same-plan snapshots share a grown slab,
-# which only ever over-provisions (eff_slab is clamped to n_cand).
-_SLAB_CACHE: dict = {}
-
-
-def _slab_for(snapshot: ClusterSnapshot) -> int:
-    return _SLAB_CACHE.get(snapshot.spec, snapshot.spec.slab)
+    staleness: int = 0   # delta points ingested but not visible to this
+    #                      answer (the delta watermark; 0 = fully fresh)
+    degraded: bool = False  # True when the serving session is running on
+    #                      a circuit-broken (failing/stalled) compaction —
+    #                      staleness is no longer bounded by the policy
 
 
 def assign(snapshot: ClusterSnapshot, queries, *,
            scheduler: BucketScheduler | None = None,
            block_q: int = 256, backend: str | None = None,
-           max_regrow: int = 8) -> AssignResult:
+           max_regrow: int = nb.MAX_SLAB_REGROW) -> AssignResult:
     """Label ``queries`` (nq, 3) against the frozen ``snapshot``.
 
     Pass a shared ``scheduler`` from a serving loop to get bucketed shape
@@ -66,9 +65,7 @@ def assign(snapshot: ClusterSnapshot, queries, *,
     cache keys a loop would).
     """
     sched = scheduler or BucketScheduler(min_bucket=block_q)
-    q_np = np.asarray(queries, np.float32)
-    if q_np.ndim != 2 or q_np.shape[1] != 3:
-        raise ValueError(f"queries must be (nq, 3), got {q_np.shape}")
+    q_np = validate_points(queries, name="queries")
     q_pad, nq = sched.pad(q_np)
     if q_pad.shape[0] % block_q:
         raise ValueError(
@@ -78,7 +75,7 @@ def assign(snapshot: ClusterSnapshot, queries, *,
     eps2 = float(snapshot.eps) ** 2
     q_dev = jnp.asarray(q_pad)
 
-    slab = _slab_for(snapshot)
+    slab = snapshot.slab
     t0 = time.perf_counter()
 
     def trace_key(s):
@@ -93,15 +90,13 @@ def assign(snapshot: ClusterSnapshot, queries, *,
             snapshot.codes, snapshot.cands, snapshot.croot_sorted, q_dev,
             jnp.int32(nq))
         jax.block_until_ready(counts)
-        if not bool(overflow):
+        if not bool(overflow) and not faults.fire("serve.assign.overflow"):
             break
-        if slab >= spec.n_cand or attempt == max_regrow:
-            raise RuntimeError(
-                f"cross-query slab overflow persists at slab={slab} "
-                f"(n_cand={spec.n_cand}) — corrupt snapshot layout?")
         sched.note_trace(trace_key(slab))  # the overflowed attempt compiled
-        slab = min(slab * 2, spec.n_cand)
-        _SLAB_CACHE[spec] = slab
+        sched.note_regrow()
+        slab = next_slab(slab, spec.n_cand, attempt=attempt,
+                         max_regrow=max_regrow, what="cross-query")
+        snapshot.note_slab(slab)
     seconds = time.perf_counter() - t0
     sched.note_call(trace_key(slab), seconds)
 

@@ -1,0 +1,170 @@
+"""Deterministic fault injection for the serving envelope (DESIGN.md §12).
+
+Every degradation path in the resilience layer — circuit-broken
+compaction, bounded slab regrow, admission shedding, snapshot fallback —
+is exercised by *injected* faults rather than asserted in prose. The
+harness is deliberately boring: a module-level registry of **named
+sites**, armed from tests/benchmarks with :func:`inject` and consulted
+from production code with :func:`fire`. A disarmed site costs one dict
+lookup on a (normally empty) registry; there are no threads, timers, or
+randomness — a fault fires exactly ``times`` times in call order, so a
+chaos test replays bit-identically.
+
+Sites instrumented in this codebase (``inject`` validates the name):
+
+  * ``serve.compact``         — inside ``ServeSession`` compaction, after
+    the decision to rebuild but before the new snapshot is built: a
+    ``delay`` models a compaction *stall*, an ``error`` a failed rebuild.
+    Either way the previously published snapshot stays live (the swap is
+    the last step), which is exactly what the circuit-breaker tests pin.
+  * ``serve.assign.overflow`` — forces the cross-query slab-overflow flag
+    in ``assign``'s regrow loop, exercising double-and-retrace, regrow
+    telemetry, and the bounded-retry ``CapacityError``.
+  * ``serve.ingest.overflow`` — same forced overflow for the delta
+    labeling program in ``ServeSession.ingest``.
+  * ``serve.ingest.label``    — inside online delta labeling (after the
+    delta append): an ``error`` models a mid-ingest crash for
+    idempotency/replay tests.
+
+File-level faults don't need a site: :func:`corrupt_checkpoint` damages a
+published checkpoint step on disk (truncated arrays, garbage metadata, or
+a missing file) for the ``load_snapshot`` fallback tests, and
+:func:`malform` returns a poisoned copy of a point chunk (NaN/Inf rows,
+wrong dims, wrong dtype) for the input-validation tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+SITES = frozenset({
+    "serve.compact",
+    "serve.assign.overflow",
+    "serve.ingest.overflow",
+    "serve.ingest.label",
+})
+
+
+@dataclasses.dataclass
+class Fault:
+    """One armed fault: fires ``times`` times (-1 = every call), sleeping
+    ``delay`` seconds and/or raising ``error`` at each firing."""
+    site: str
+    error: Optional[BaseException] = None
+    delay: float = 0.0
+    times: int = 1
+    fired: int = 0
+
+    @property
+    def armed(self) -> bool:
+        return self.times < 0 or self.fired < self.times
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        clear(self.site)
+        return False
+
+
+_REGISTRY: dict = {}
+
+
+def inject(site: str, *, error: Optional[BaseException] = None,
+           delay: float = 0.0, times: int = 1) -> Fault:
+    """Arm ``site`` (replacing any previous fault there). Returns the
+    :class:`Fault`, usable as a context manager that disarms on exit."""
+    if site not in SITES:
+        raise ValueError(f"unknown fault site {site!r}; known: "
+                         + ", ".join(sorted(SITES)))
+    f = Fault(site=site, error=error, delay=delay, times=times)
+    _REGISTRY[site] = f
+    return f
+
+
+def clear(site: Optional[str] = None) -> None:
+    """Disarm one site, or every site when ``site`` is None."""
+    if site is None:
+        _REGISTRY.clear()
+    else:
+        _REGISTRY.pop(site, None)
+
+
+def fire(site: str) -> bool:
+    """Production-side hook: fire the fault armed at ``site``, if any.
+
+    Returns True when an armed fault fired (boolean faults — e.g. a forced
+    overflow flag), after sleeping its ``delay``; raises its ``error`` if
+    one was attached. Disarmed sites return False at dict-lookup cost.
+    """
+    f = _REGISTRY.get(site)
+    if f is None or not f.armed:
+        return False
+    f.fired += 1
+    if f.delay:
+        time.sleep(f.delay)
+    if f.error is not None:
+        raise f.error
+    return True
+
+
+def fired_count(site: str) -> int:
+    f = _REGISTRY.get(site)
+    return 0 if f is None else f.fired
+
+
+# --- file-level faults ------------------------------------------------------
+
+
+def corrupt_checkpoint(ckpt_dir: str, step: int, *,
+                       mode: str = "truncate") -> str:
+    """Damage a *published* checkpoint step in place (crash-after-publish /
+    bit-rot scenarios the atomic rename cannot rule out).
+
+    Modes: ``truncate`` (arrays.npz cut to 16 bytes), ``garbage-meta``
+    (meta.json overwritten with non-JSON), ``missing-arrays`` (arrays.npz
+    deleted). Returns the damaged step directory path.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if not os.path.isdir(path):
+        raise FileNotFoundError(path)
+    arrays = os.path.join(path, "arrays.npz")
+    if mode == "truncate":
+        with open(arrays, "rb") as f:
+            head = f.read(16)
+        with open(arrays, "wb") as f:
+            f.write(head)
+    elif mode == "garbage-meta":
+        with open(os.path.join(path, "meta.json"), "w") as f:
+            f.write("{not json")
+    elif mode == "missing-arrays":
+        os.remove(arrays)
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return path
+
+
+def malform(chunk, kind: str):
+    """A poisoned copy of ``chunk`` for input-validation tests.
+
+    Kinds: ``nan`` / ``inf`` (one coordinate poisoned), ``wrong-dims``
+    ((m, 2) columns), ``wrong-dtype`` (complex64), ``wrong-rank`` (1-D).
+    """
+    a = np.array(chunk, copy=True)
+    if kind == "nan":
+        a[len(a) // 2, 0] = np.nan
+    elif kind == "inf":
+        a[len(a) // 2, 1] = np.inf
+    elif kind == "wrong-dims":
+        a = a[:, :2]
+    elif kind == "wrong-dtype":
+        a = a.astype(np.complex64)
+    elif kind == "wrong-rank":
+        a = a.reshape(-1)
+    else:
+        raise ValueError(f"unknown malform kind {kind!r}")
+    return a

@@ -25,11 +25,28 @@ batch path and freezes a new snapshot. Compaction is parity-tested: its
 labels are bit-identical to ``dbscan()`` on the concatenation, so the
 serving path never drifts from the batch semantics for more than one
 delta window.
+
+**The resilience envelope (DESIGN.md §12).** Compaction runs behind a
+:class:`~repro.serve.resilience.CircuitBreaker`: a failed or stalled
+rebuild never unpublishes anything (the snapshot swap is the *last* step,
+and on-disk publication rides the checkpoint layer's atomic rename), and
+once the breaker trips, due-compactions are deferred instead of retried
+on the hot path — ``assign`` keeps answering from the last published
+snapshot with ``staleness`` (the delta watermark) and ``degraded`` riding
+on every answer. Ingest is **idempotent**: chunks may carry a
+client-supplied ``request_id``; a bounded dedup window makes replays
+(crash-retry, at-least-once upstream) byte-level no-ops that return the
+recorded result. Both ingest and assign sit behind a bounded
+:class:`~repro.serve.resilience.AdmissionQueue` that sheds load
+explicitly (reject + ``retry_after``) on depth/age thresholds.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import hashlib
+import time
+from collections import OrderedDict
+from typing import NamedTuple, Optional
 
 import functools
 
@@ -41,7 +58,11 @@ from ..core import neighbors as nb
 from ..core.dbscan import _hook_step
 from ..core.union_find import pointer_jump
 from ..kernels import ops
-from .assign import _SLAB_CACHE, _slab_for, AssignResult, assign
+from . import faults
+from .assign import AssignResult, assign
+from .resilience import (AdmissionQueue, CapacityError, CircuitBreaker,
+                         CompactionError, AdmissionError, ServeError,
+                         ValidationError, next_slab, validate_points, CLOSED)
 from .scheduler import BIG, BucketScheduler
 from .snapshot import ClusterSnapshot, build_snapshot, save_snapshot
 
@@ -52,6 +73,9 @@ class IngestResult(NamedTuple):
     labels: np.ndarray   # (chunk,) int32 online labels of the new points
     compacted: bool      # this ingest crossed the compaction threshold
     n_delta: int         # delta points outstanding after this ingest
+    deduped: bool = False    # replayed request_id: recorded result, no-op
+    degraded: bool = False   # a due compaction was deferred/failed (the
+    #                          breaker is holding it); staleness grows
 
 
 @functools.lru_cache(maxsize=32)
@@ -116,16 +140,38 @@ def _delta_label_fn(spec, eps2: float, min_pts: int, n_corpus: int,
     return label
 
 
+def _digest(chunk: np.ndarray) -> bytes:
+    """Byte-level identity of a chunk — what makes a replayed request_id
+    with *different* payload a detectable client bug, not a silent skip."""
+    return hashlib.sha256(np.ascontiguousarray(chunk).tobytes()).digest()
+
+
 @dataclasses.dataclass
 class ServeSession:
-    """Stateful serving wrapper: frozen snapshot + delta buffer + buckets.
+    """Stateful serving wrapper: frozen snapshot + delta buffer + buckets
+    + the resilience envelope (module docstring; DESIGN.md §10, §12).
 
-    ``max_delta_frac`` is the compaction policy: the delta may grow to this
-    fraction of the corpus before a full re-cluster folds it in (bounded
-    staleness of the frozen half). ``delta_capacity`` hard-bounds delta
-    memory regardless of corpus size. ``ckpt_dir`` (optional) republishes
-    each compacted snapshot through the atomic checkpoint machinery with a
-    bumped step.
+    Policy knobs:
+
+    * ``max_delta_frac`` — compaction policy: the delta may grow to this
+      fraction of the corpus before a full re-cluster folds it in
+      (bounded staleness of the frozen half). ``delta_capacity``
+      hard-bounds delta memory regardless of corpus size.
+    * ``ckpt_dir`` (optional) republishes each compacted snapshot through
+      the atomic checkpoint machinery with a bumped step.
+    * ``breaker`` — circuit breaker on compaction/rebuild (default:
+      3 consecutive failures open it for 30 s). While it is open, due
+      compactions are deferred (``IngestResult.degraded``), ``assign``
+      keeps serving the last published snapshot, and an ingest that would
+      overflow ``delta_capacity`` is shed with ``AdmissionError``
+      (``retry_after`` = the breaker's next-probe time) instead of
+      growing without bound.
+    * ``admission`` — bounded admission queue for queue-based load
+      leveling; ``assign``/``ingest`` submit through it, and the
+      burst-mode :meth:`submit`/:meth:`pump` pair exposes the queue
+      directly (age-based shedding happens at pump time).
+    * ``dedup_window`` — how many recent ``request_id`` results are
+      retained to absorb at-least-once replays (0 disables).
     """
     snapshot: ClusterSnapshot
     max_delta_frac: float = 0.25
@@ -134,6 +180,9 @@ class ServeSession:
     backend: str | None = None
     block_q: int = 256
     ckpt_dir: str | None = None
+    breaker: CircuitBreaker | None = None
+    admission: AdmissionQueue | None = None
+    dedup_window: int = 1024
 
     def __post_init__(self):
         if self.scheduler is None:
@@ -143,17 +192,93 @@ class ServeSession:
                 f"scheduler min_bucket={self.scheduler.min_bucket} must be "
                 f"a multiple of block_q={self.block_q} (every bucket in the "
                 "power-of-two ladder is then a whole number of query tiles)")
+        if self.breaker is None:
+            self.breaker = CircuitBreaker()
+        if self.admission is None:
+            self.admission = AdmissionQueue()
         self._delta = np.zeros((0, 3), np.float32)
         self._step = 0
         self.n_compactions = 0
+        self._compaction_deferred = False
+        self._dedup: OrderedDict = OrderedDict()  # request_id -> (digest,
+        #                                           IngestResult)
+        self._pending: list = []  # burst mode: (ticket, queries) FIFO
+
+    # --- health ------------------------------------------------------------
+
+    @property
+    def degraded(self) -> bool:
+        """True while the session serves on a circuit-broken compaction:
+        the frozen half's staleness is no longer bounded by
+        ``max_delta_frac`` — answers still come from the last *published*
+        snapshot, flagged per-answer."""
+        return self._compaction_deferred or self.breaker.state != CLOSED
 
     # --- queries -----------------------------------------------------------
 
     def assign(self, queries) -> AssignResult:
         """DBSCAN-predict against the frozen snapshot (delta points become
-        visible to queries at the next compaction)."""
-        return assign(self.snapshot, queries, scheduler=self.scheduler,
-                      block_q=self.block_q, backend=self.backend)
+        visible to queries at the next compaction). Every answer carries
+        ``staleness`` (the delta watermark — how many ingested points this
+        answer cannot see) and ``degraded`` (breaker holding compaction).
+        Raises ``AdmissionError`` when the admission queue is full."""
+        q_np = validate_points(queries, name="queries")
+        ticket = self.admission.admit(len(q_np))
+        t0 = time.perf_counter()
+        try:
+            return self._assign_admitted(q_np)
+        finally:
+            self.admission.finish(ticket, time.perf_counter() - t0)
+
+    def _assign_admitted(self, q_np: np.ndarray) -> AssignResult:
+        try:
+            r = assign(self.snapshot, q_np, scheduler=self.scheduler,
+                       block_q=self.block_q, backend=self.backend)
+        except CapacityError:
+            # a structurally-exhausted regrow is a rebuild-path failure:
+            # count it toward the breaker so a corrupt layout trips it
+            self.breaker.record_failure()
+            raise
+        return r._replace(staleness=self.n_delta, degraded=self.degraded)
+
+    # --- burst mode: explicit queue ----------------------------------------
+
+    def submit(self, queries, *, now: float | None = None) -> int:
+        """Enqueue one assign request (queue-based load leveling). Returns
+        a ticket id; raises ``AdmissionError`` (with ``retry_after``) when
+        the queue is at ``max_depth`` — the explicit shed that replaces a
+        melting p99."""
+        q_np = validate_points(queries, name="queries")
+        ticket = self.admission.submit(len(q_np), now=now)
+        self._pending.append((ticket, q_np))
+        return ticket.id
+
+    def pump(self, *, now: float | None = None) -> list:
+        """Drain the queue oldest-first: serve every ticket still within
+        ``max_age_s``, shed the rest (they are *dropped* — the client
+        already timed out; serving them would burn device time on dead
+        answers). Returns [(ticket_id, AssignResult | AdmissionError)]."""
+        out = []
+        by_id = {t.id: q for t, q in self._pending}
+        self._pending.clear()
+        while True:
+            t = self.admission.take(now=now)
+            if t is None:
+                break
+            q_np = by_id.pop(t.id)
+            t0 = time.perf_counter()
+            try:
+                r = self._assign_admitted(q_np)
+            except ServeError as e:
+                r = e  # per-ticket failure must not abort the drain
+            finally:
+                self.admission.finish(t, time.perf_counter() - t0)
+            out.append((t.id, r))
+        for tid in by_id:  # age-shed at take(): report explicitly
+            out.append((tid, AdmissionError(
+                "request waited past max_age_s and was shed at pump",
+                retry_after=self.admission.service_estimate_s())))
+        return out
 
     # --- ingest ------------------------------------------------------------
 
@@ -165,31 +290,71 @@ class ServeSession:
         return (self.n_delta >= self.delta_capacity
                 or self.n_delta >= self.max_delta_frac * self.snapshot.n)
 
-    def ingest(self, chunk) -> IngestResult:
+    def ingest(self, chunk, *,
+               request_id: Optional[str] = None) -> IngestResult:
         """Append ``chunk`` (m, 3) and label it online (module docstring).
 
         Returns the chunk's labels; earlier delta points may silently
         re-label as later arrivals densify their neighborhoods — readers
         that care should re-``assign``.
+
+        ``request_id`` (optional) makes the call idempotent: a replay of
+        an id inside the dedup window returns the recorded result without
+        touching the delta (``deduped=True``); the same id with a
+        *different* payload raises ``ValidationError``.
         """
-        chunk = np.asarray(chunk, np.float32)
-        if chunk.ndim != 2 or chunk.shape[1] != 3:
-            raise ValueError(f"chunk must be (m, 3), got {chunk.shape}")
+        chunk = validate_points(chunk, name="chunk")
+        if request_id is not None and self.dedup_window > 0:
+            hit = self._dedup.get(request_id)
+            if hit is not None:
+                digest, result = hit
+                if digest != _digest(chunk):
+                    raise ValidationError(
+                        f"request_id {request_id!r} replayed with a "
+                        "different payload — at-least-once delivery must "
+                        "not mutate the request", request_id=request_id)
+                return result._replace(deduped=True)
         if len(chunk) > self.delta_capacity:
-            raise ValueError(
+            raise ValidationError(
                 f"chunk of {len(chunk)} exceeds delta_capacity="
                 f"{self.delta_capacity}; split it or raise the capacity")
+        if self.n_delta + len(chunk) > self.delta_capacity:
+            # the buffer is hard-bounded: fold it first, or shed the chunk
+            # when the breaker is holding compaction (retry once it probes)
+            if not self._try_compact():
+                raise AdmissionError(
+                    "delta buffer full and compaction is circuit-broken; "
+                    "retry after the breaker's next probe window",
+                    retry_after=max(self.breaker.retry_after(), 0.001),
+                    n_delta=self.n_delta)
         d0 = self.n_delta
         self._delta = np.concatenate([self._delta, chunk])
         d1 = self.n_delta
-        if self._compaction_due():
-            self.compact()
-            n_old = self.snapshot.n - d1
-            labels = np.asarray(self.snapshot.labels)[n_old + d0:n_old + d1]
-            return IngestResult(labels=labels.astype(np.int32),
-                                compacted=True, n_delta=0)
-        labels = self._label_delta()[d0:d1]
-        return IngestResult(labels=labels, compacted=False, n_delta=d1)
+        compacted = False
+        try:
+            if self._compaction_due() and self._try_compact():
+                compacted = True
+                n_old = self.snapshot.n - d1
+                labels = np.asarray(self.snapshot.labels)[
+                    n_old + d0:n_old + d1]
+                result = IngestResult(labels=labels.astype(np.int32),
+                                      compacted=True, n_delta=0)
+            else:
+                faults.fire("serve.ingest.label")  # chaos: mid-ingest crash
+                labels = self._label_delta()[d0:d1]
+                result = IngestResult(labels=labels, compacted=False,
+                                      n_delta=d1, degraded=self.degraded)
+        except BaseException:
+            if not compacted:
+                # crash-retry contract: a failed ingest leaves no trace, so
+                # the client's replay is a fresh attempt, not a double
+                self._delta = self._delta[:d0]
+            raise
+        if request_id is not None and self.dedup_window > 0:
+            self._dedup[request_id] = (_digest(chunk), result)
+            while len(self._dedup) > self.dedup_window:
+                self._dedup.popitem(last=False)
+        return result
 
     def _label_delta(self) -> np.ndarray:
         d = self.n_delta
@@ -198,40 +363,84 @@ class ServeSession:
         dpts[:d] = self._delta
         spec = self.snapshot.spec
         eps2 = float(self.snapshot.eps) ** 2
-        slab = _slab_for(self.snapshot)  # shared with assign: a grown slab
-        #                                  sticks, no per-ingest re-regrow
-        while True:
+        slab = self.snapshot.slab  # shared with assign: a grown slab
+        #                            sticks, no per-ingest re-regrow
+        for attempt in range(nb.MAX_SLAB_REGROW + 1):
             fn = _delta_label_fn(spec, eps2, int(self.snapshot.min_pts),
                                  self.snapshot.n, self.backend, slab,
                                  self.block_q)
             labels, _, _, overflow = fn(
                 self.snapshot.codes, self.snapshot.cands,
                 self.snapshot.croot_sorted, jnp.asarray(dpts), jnp.int32(d))
-            if not bool(overflow):
+            if not bool(overflow) \
+                    and not faults.fire("serve.ingest.overflow"):
                 break
-            if slab >= spec.n_cand:
-                raise RuntimeError("delta cross-sweep slab overflow at "
-                                   f"slab={slab} (n_cand={spec.n_cand})")
-            slab = min(slab * 2, spec.n_cand)
-            _SLAB_CACHE[spec] = slab
+            self.scheduler.note_regrow()
+            slab = next_slab(slab, spec.n_cand, attempt=attempt,
+                             max_regrow=nb.MAX_SLAB_REGROW,
+                             what="delta cross-sweep")
+            self.snapshot.note_slab(slab)
         return np.asarray(labels)[:d]
 
-    def compact(self) -> ClusterSnapshot:
+    # --- compaction --------------------------------------------------------
+
+    def _try_compact(self) -> bool:
+        """Breaker-gated compaction for the hot path: False when deferred
+        (breaker open) or failed (failure recorded, old snapshot live)."""
+        if not self.breaker.allow():
+            self._compaction_deferred = True
+            return False
+        try:
+            self.compact(_gated=False)
+            return True
+        except CompactionError:
+            return False
+
+    def compact(self, *, force: bool = False,
+                _gated: bool = True) -> ClusterSnapshot:
         """Fold the delta into a fresh snapshot via the ordinary batch path
         (bit-identical to ``dbscan`` on the concatenated points — the
         parity contract ingest's bounded staleness is measured against).
         The re-cluster runs under the frontier round driver (DESIGN.md
         §11, via ``build_snapshot``): compaction is the serving path's
         recurring full-cluster cost, and on a mostly-converged corpus the
-        frontier collapses its stage-2 rounds to the merge seams."""
-        pts = np.concatenate([np.asarray(self.snapshot.points),
-                              self._delta])
-        self.snapshot = build_snapshot(
-            pts, self.snapshot.eps, self.snapshot.min_pts,
-            engine=self.snapshot.engine, backend=self.backend)
+        frontier collapses its stage-2 rounds to the merge seams.
+
+        The rebuild is guarded by the session's circuit breaker: with the
+        breaker open this raises ``CompactionError`` immediately (pass
+        ``force=True`` for an operator-driven recovery attempt); a failed
+        rebuild records a breaker failure and leaves the previously
+        published snapshot fully live — the in-memory swap is the last
+        step, and on-disk publication is the checkpoint layer's atomic
+        rename, so a crashed compaction never leaves a half-visible
+        corpus.
+        """
+        if _gated and not force and not self.breaker.allow():
+            raise CompactionError(
+                "compaction circuit breaker is open "
+                f"(state={self.breaker.state}); force=True to probe now",
+                retry_after=self.breaker.retry_after())
+        try:
+            faults.fire("serve.compact")  # chaos: stall (delay) / failure
+            pts = np.concatenate([np.asarray(self.snapshot.points),
+                                  self._delta])
+            new_snapshot = build_snapshot(
+                pts, self.snapshot.eps, self.snapshot.min_pts,
+                engine=self.snapshot.engine, backend=self.backend)
+        except Exception as e:
+            self.breaker.record_failure()
+            self._compaction_deferred = True
+            raise CompactionError(
+                f"compaction rebuild failed ({type(e).__name__}: {e}); "
+                "last published snapshot remains live",
+                retry_after=self.breaker.retry_after()) from e
+        # success: atomic swap, then atomic publish
+        self.snapshot = new_snapshot
         self._delta = np.zeros((0, 3), np.float32)
         self.n_compactions += 1
         self._step += 1
+        self.breaker.record_success()
+        self._compaction_deferred = False
         if self.ckpt_dir is not None:
             save_snapshot(self.snapshot, self.ckpt_dir, step=self._step)
         return self.snapshot

@@ -44,6 +44,7 @@ class BucketScheduler:
         self._seen_keys: set = set()
         self.calls: int = 0
         self.recompiles: int = 0
+        self.regrows: int = 0
         self._latencies = collections.deque(maxlen=self.latency_window)
 
     # --- shape bucketing ---------------------------------------------------
@@ -98,11 +99,19 @@ class BucketScheduler:
         self.calls += 1
         self._latencies.append(seconds)
 
+    def note_regrow(self) -> None:
+        """Record one slab overflow → regrow retry (assign or delta
+        labeling). A nonzero steady-state rate means the corpus plan's
+        slab is chronically undersized for the live query distribution —
+        the operator signal behind DESIGN.md §12's bounded-regrow cap."""
+        self.regrows += 1
+
     def reset_stats(self) -> None:
         """Zero counters but *keep* the seen shape keys — the post-warmup
         recompile count should report only genuinely new traces."""
         self.calls = 0
         self.recompiles = 0
+        self.regrows = 0
         self._latencies.clear()
 
     def latency_percentiles(self, qs=(50, 99)) -> tuple:

@@ -24,6 +24,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
+import zipfile
 from typing import Any
 
 import jax
@@ -35,10 +37,20 @@ from ..core import grid as grid_mod
 from ..core import neighbors as nb
 from ..core.dbscan import dbscan
 from ..distributed import checkpoint as ckpt
+from . import resilience
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
 SNAPSHOT_FORMAT = 1
+
+# Grown cross-query slab capacities keyed by the snapshot's (hashable)
+# plan; a regrow sticks so steady-state serving pays it once, not per
+# call. Keying by spec rather than object identity means the entry
+# survives reload of the same snapshot and can never alias an unrelated
+# one (a different corpus has a different plan); at worst two same-plan
+# snapshots share a grown slab, which only ever over-provisions (the
+# effective slab is clamped to n_cand).
+_SLAB_CACHE: dict = {}
 
 
 @jax.tree_util.register_pytree_node_class
@@ -78,6 +90,16 @@ class ClusterSnapshot:
     @property
     def n(self) -> int:
         return self.spec.n
+
+    @property
+    def slab(self) -> int:
+        """Effective cross-query slab capacity: the plan's, or the grown
+        value a previous overflow-regrow stuck for this plan."""
+        return _SLAB_CACHE.get(self.spec, self.spec.slab)
+
+    def note_slab(self, slab: int) -> None:
+        """Stick a regrown slab capacity for this snapshot's plan."""
+        _SLAB_CACHE[self.spec] = slab
 
     def n_clusters(self) -> int:
         lab = np.asarray(self.labels)
@@ -153,24 +175,14 @@ def save_snapshot(snapshot: ClusterSnapshot, ckpt_dir: str, *,
     return ckpt.save(ckpt_dir, step, snapshot, meta=meta, keep=keep)
 
 
-def load_snapshot(ckpt_dir: str, *, step: int | None = None) \
-        -> ClusterSnapshot:
-    """Load the newest complete snapshot (or a specific ``step``).
-
-    Incomplete ``*.tmp*`` leftovers from a crash mid-write are never
-    considered — the atomic-rename contract of the checkpoint layer.
-    """
-    if step is None:
-        step = ckpt.latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no snapshots in {ckpt_dir}")
+def _load_snapshot_step(ckpt_dir: str, step: int) -> ClusterSnapshot:
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)["meta"]
     if meta.get("kind") != "cluster_snapshot":
         raise ValueError(f"{path} is not a cluster snapshot checkpoint")
     if meta.get("format", 0) > SNAPSHOT_FORMAT:
-        raise ValueError(
+        raise resilience.SnapshotFormatError(
             f"snapshot format {meta['format']} is newer than this build "
             f"supports ({SNAPSHOT_FORMAT})")
     spec = _spec_from_meta(meta["spec"])
@@ -183,3 +195,41 @@ def load_snapshot(ckpt_dir: str, *, step: int | None = None) \
         min_pts=int(meta["min_pts"]))
     restored, _ = ckpt.restore(ckpt_dir, skeleton, step=step)
     return jax.tree.map(jnp.asarray, restored)
+
+
+def load_snapshot(ckpt_dir: str, *, step: int | None = None) \
+        -> ClusterSnapshot:
+    """Load the newest *intact* snapshot (or a specific ``step``).
+
+    Incomplete ``*.tmp*`` leftovers from a crash mid-write are never
+    considered — the atomic-rename contract of the checkpoint layer. What
+    the rename cannot rule out is damage *after* publish (bit-rot, a
+    truncating copy, fs corruption): a published step that fails to read
+    back — truncated/garbage arrays, unparsable metadata, missing files —
+    is skipped with a warning and the next-newest keep-K step is tried
+    (DESIGN.md §12.5). Only when no intact version exists does the load
+    raise. Pinning an explicit ``step=`` disables the fallback: the
+    caller asked for that exact version, so corruption there is an error.
+    A snapshot written by a *newer format* raises
+    :class:`~repro.serve.resilience.SnapshotFormatError` without
+    fallback — it is intact, just unsupported.
+    """
+    if step is not None:
+        return _load_snapshot_step(ckpt_dir, step)
+    steps = ckpt.available_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no snapshots in {ckpt_dir}")
+    errors = []
+    for s in reversed(steps):
+        try:
+            return _load_snapshot_step(ckpt_dir, s)
+        except resilience.SnapshotFormatError:
+            raise
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+            errors.append(f"step {s}: {type(e).__name__}: {e}")
+            warnings.warn(
+                f"snapshot step {s} in {ckpt_dir} is unreadable "
+                f"({type(e).__name__}: {e}); falling back to the "
+                "next-newest intact version", RuntimeWarning)
+    raise resilience.ServeError(
+        f"no intact snapshot in {ckpt_dir}: " + "; ".join(errors))

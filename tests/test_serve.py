@@ -139,6 +139,15 @@ def test_snapshot_roundtrip_and_crash_leftover(tmp_path):
         np.asarray(snap2.labels), np.asarray(snap.labels))
     assert snap2.spec == snap.spec
     assert (snap2.eps, snap2.min_pts) == (snap.eps, snap.min_pts)
+    # published-then-damaged: a *renamed* step whose arrays were later
+    # truncated (bit-rot — the atomic rename can't rule this out) must
+    # fall back to the newest intact version with a warning, not raise
+    serve.save_snapshot(snap, d, step=2)
+    serve.faults.corrupt_checkpoint(d, 2, mode="truncate")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        snap3 = serve.load_snapshot(d)
+    np.testing.assert_array_equal(
+        np.asarray(snap3.labels), np.asarray(snap.labels))
 
 
 def test_save_snapshot_versions_and_gc(tmp_path):
