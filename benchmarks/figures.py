@@ -287,6 +287,7 @@ def bench_engine_skew(full: bool = False):
     # warm-cache by construction (timeit's warmup build populates the
     # WavefrontSpec cache), which is the steady-state cost the spec-reuse
     # machinery is for; cold calibration cost rides in derived.
+    from repro.core import bvh as bvh_mod
     times = {}
     for name in ("bvh-stack", "bvh"):
         built = []
@@ -297,16 +298,28 @@ def bench_engine_skew(full: bool = False):
             lambda: built.append(nb.make_engine(pts, eps, engine=name))
             or built[-1], repeats=1)
         eng = built[-1]
-        t_sweep = timeit(lambda: dbscan(pts, eps, minpts, eng=eng),
-                         repeats=1)
-        times[name] = (t_cold, t_build, t_sweep, eng)
+        # the wavefront engine advertises sweep_frontier, so cluster it
+        # under the frontier driver — its telemetry (per-round live query
+        # blocks) rides in derived alongside the per-level frontier sizes
+        hook = "frontier" if name == "bvh" else "device"
+        got = []
+        t_sweep = timeit(
+            lambda: got.append(dbscan(pts, eps, minpts, eng=eng,
+                                      hook_loop=hook)) or got[-1],
+            repeats=1)
+        times[name] = (t_cold, t_build, t_sweep, eng, got[-1])
         r.row(f"{name}-build@n={n}", t_build, f"cold={t_cold:.4f}",
               engine=name)
-    _, tb_s, ts_s, _ = times["bvh-stack"]
-    _, tb_w, ts_w, eng_w = times["bvh"]
+    _, tb_s, ts_s, _, _ = times["bvh-stack"]
+    _, tb_w, ts_w, eng_w, res_w = times["bvh"]
+    levels = bvh_mod.wavefront_levels(eng_w)
     r.row(f"bvh-stack@n={n}", ts_s, f"build={tb_s:.4f}", engine="bvh-stack")
     r.row(f"bvh-wave@n={n}", ts_w,
           f"build={tb_w:.4f},frontier_cap={eng_w.meta.capacity},"
+          f"peak={eng_w.meta.peak},batch={eng_w.meta.batch},"
+          f"rounds={int(res_w.n_rounds)},"
+          f"blocks_per_round={_frontier_hist(res_w)},"
+          f"level_entries={'/'.join(map(str, levels.tolist()))},"
           f"speedup_vs_stack={ts_s / ts_w:.2f}",
           engine="bvh")
     return r.rows
@@ -468,6 +481,44 @@ def bench_serve(full: bool = False):
     return r.rows
 
 
+def roofline(full: bool = False):
+    """BVH level-kernel roofline (DESIGN.md §13): per-level bytes moved,
+    FLOPs and arithmetic intensity of the batched wavefront expand step,
+    plus the launch count — the data behind ROADMAP's launch/DMA-bound
+    hypothesis. Frontier sizes come from the engine's own calibration
+    telemetry (``wavefront_levels``), so the rows describe exactly the
+    traversal the committed skew benchmark times; seconds are 0.0 because
+    this figure is a static traffic model, not a timing."""
+    from repro.core import bvh as bvh_mod
+    from .roofline import bvh_level_report
+
+    r = Reporter("roofline")
+    n = 16_384 if full else 4_096
+    pts = synth.load("skewed2d", n, seed=10)
+    eps = 0.05
+    eng = nb.make_engine(pts, eps, engine="bvh")
+    spec = eng.meta
+    levels = bvh_mod.wavefront_levels(eng)
+    rep = bvh_level_report(levels, batch=spec.batch, dims=pts.shape[1],
+                           tile=spec.tile, prune_dtype=spec.prune_dtype)
+    for row in rep["levels"]:
+        r.row(f"level{row['level']:02d}@n={n}", 0.0,
+              f"entries={row['entries']},launches={row['launches']},"
+              f"bytes={row['bytes']},flops={row['flops']},"
+              f"intensity={row['intensity']:.3f}",
+              engine="bvh")
+    t = rep["total"]
+    r.row(f"total@n={n}", 0.0,
+          f"levels={t['levels']},entries={t['entries']},"
+          f"launches={t['launches']},bytes={t['bytes']},flops={t['flops']},"
+          f"intensity={t['intensity']:.3f},"
+          f"entry_bytes={rep['entry_bytes']},entry_flops={rep['entry_flops']},"
+          f"batch={spec.batch},tile={spec.tile},"
+          f"prune_dtype={spec.prune_dtype},frontier_cap={spec.capacity}",
+          engine="bvh")
+    return r.rows
+
+
 ALL_FIGS = [fig4_small_eps, fig5_eps, fig6_size, fig7_growth, fig8_dense,
             fig9_early_exit, fig10_breakdown, table_reuse, bench_engine_skew,
-            bench_frontier, bench_serve]
+            bench_frontier, bench_serve, roofline]

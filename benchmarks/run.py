@@ -20,6 +20,10 @@ present in both runs:
   * derived ``speedup*`` ratios: machine-independent, so they get the
     tighter ``--ratio-tol`` — a frontier/wavefront/CSR speedup collapsing
     is a regression even if absolute times moved.
+
+A few headline ratios additionally carry an absolute floor (``ABS_FLOORS``)
+that binds on the fresh run independent of the baseline — e.g. the
+wavefront-vs-stack BVH traversal speedup must stay ≥ 3x.
 """
 from __future__ import annotations
 
@@ -31,6 +35,14 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# Absolute floors for derived ratios, enforced by --check-regress on the
+# FRESH run regardless of what the committed baseline says: a baseline
+# regenerated on a bad run must not grandfather a collapsed ratio in. The
+# wavefront-vs-stack traversal gap is the headline structural claim of the
+# batched/terminating/mixed-precision rework (DESIGN.md §13).
+ABS_FLOORS = {"speedup_vs_stack": 3.0}
 
 
 def _derived_speedups(derived: str) -> dict:
@@ -61,6 +73,13 @@ def check_regress(fresh_rows: list, committed: list, *,
     matched = 0
     for row in fresh_rows:
         key = (row["name"], row["case"])
+        # absolute floors bind on every fresh row carrying the ratio, even
+        # when the baseline lacks the case (renames, fresh baselines)
+        for k, v in _derived_speedups(row.get("derived", "")).items():
+            if k in ABS_FLOORS and v < ABS_FLOORS[k]:
+                problems.append(
+                    f"{key[0]},{key[1]}: {k}={v:.2f} below absolute floor "
+                    f"{ABS_FLOORS[k]:.2f}")
         ref = base.get(key)
         if ref is None or row.get("seconds") is None:
             continue

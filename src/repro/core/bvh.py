@@ -7,16 +7,24 @@ test (dilated-AABB prune, exact sphere refine — Algorithm 2 line 6). The
 ε-dilated leaf boxes are exactly the AABBs OptiX builds around the paper's
 ε-spheres.
 
-Two traversal engines share the structure (DESIGN.md §9):
+Two traversal engines share the structure (DESIGN.md §9, §13):
 
   * ``bvh`` — **wavefront** traversal: a level-synchronous frontier of
-    (query, node) pairs, compacted after every level, expanded through the
-    fused prune/refine kernel (``kernels/bvh_sweep.py``). Work tracks the
-    *total* number of overlapping (query, node) pairs — the software
-    analogue of the RT core's ray queue. Exposes ``sweep_sorted`` over the
-    Morton-sorted leaves (the queries *are* the leaves, so the BVH's own
-    order is the sorted layout), which opts it into ``dbscan``'s on-device
-    sorted hooking loop.
+    (query-block, node) entries — each entry carries ``batch`` consecutive
+    Morton-sorted queries — compacted after every level and expanded
+    through the fused prune/refine kernel (``kernels/bvh_sweep.py``). Work
+    tracks the *total* number of overlapping (block, node) entries — the
+    software analogue of the RT core's ray queue, batched RT-kNNS-Unbound
+    style so one AABB load amortizes over a vector of queries. Payload-
+    bounded early termination (``terminate=True``) additionally skips any
+    subtree whose min core-root payload cannot lower a block's running
+    bounds, and the prune pass can run against outward-rounded bf16 boxes
+    (``prune_dtype="bf16"``) with the exact f32 sphere refine untouched.
+    Exposes ``sweep_sorted`` over the Morton-sorted leaves (the queries
+    *are* the leaves, so the BVH's own order is the sorted layout), which
+    opts it into ``dbscan``'s on-device sorted hooking loop, plus
+    ``sweep_counts`` (exact, non-terminated stage-1 counting) and a
+    ``sweep_frontier`` plan for the frontier round driver.
   * ``bvh-stack`` — per-query stack traversal under ``vmap`` + lockstep
     ``while_loop``: every query steps at the *worst* query's step count —
     the divergence RT cores absorb in hardware, kept as the FDBSCAN
@@ -56,17 +64,19 @@ _WAVE_TILE = 8192   # default frontier entries expanded per inner step
 
 
 class BVH(NamedTuple):
-    pts_sorted: jnp.ndarray   # (n, 3) f32 leaf points in Morton order
+    pts_sorted: jnp.ndarray   # (n, D) f32 leaf points in Morton order
     order: jnp.ndarray        # (n,) int32 original index per leaf
     left: jnp.ndarray         # (n-1,) int32 child node id (see encoding)
     right: jnp.ndarray        # (n-1,) int32
-    box_lo: jnp.ndarray       # (n-1, 3) f32 internal-node AABBs
-    box_hi: jnp.ndarray       # (n-1, 3) f32
+    box_lo: jnp.ndarray       # (n-1, D) f32 internal-node AABBs
+    box_hi: jnp.ndarray       # (n-1, D) f32
+    first: jnp.ndarray        # (n-1,) int32 leaf range covered by node …
+    last: jnp.ndarray         # (n-1,) int32 … [first, last], sorted ids
 
 
 class BVHState(NamedTuple):
     bvh: BVH
-    points: jnp.ndarray       # (n, 3) original order (queries)
+    points: jnp.ndarray       # (n, D) original order (queries)
 
 
 # Node id encoding: internal nodes are 0..n-2; leaf i is (n-1) + i.
@@ -88,10 +98,15 @@ def _delta_fn(codes, idx, n):
 
 def build_bvh(points: jnp.ndarray, *, dims: int = 3, lo=None,
               hi=None) -> BVH:
-    """points (n, 3) f32, n ≥ 2. ``lo``/``hi`` override the quantization
+    """points (n, D) f32, n ≥ 2. ``lo``/``hi`` override the quantization
     extent — the distributed driver passes the *real* point extent so its
     +BIG padding sentinels (which must sort to the top Morton cell) don't
-    collapse every real point into cell 0."""
+    collapse every real point into cell 0.
+
+    For D > 3 the Morton order is computed over the first three coordinates
+    only — the sort is a locality *heuristic*, so correctness never depends
+    on it: the AABBs, payload ranges and sphere refine all use the full
+    D-dimensional points."""
     n = points.shape[0]
     if lo is None:
         lo = points.min(axis=0)
@@ -99,7 +114,11 @@ def build_bvh(points: jnp.ndarray, *, dims: int = 3, lo=None,
         hi = points.max(axis=0)
     scale = jnp.where(hi > lo, 1023.0 / (hi - lo), 0.0)
     q = jnp.clip(((points - lo) * scale), 0, 1023).astype(jnp.int32)
-    codes = kops.morton_encode(q, dims=dims)
+    if q.shape[1] < 3:
+        q3 = jnp.pad(q, ((0, 0), (0, 3 - q.shape[1])))
+    else:
+        q3 = q[:, :3]
+    codes = kops.morton_encode(q3, dims=min(dims, 3))
     order = jnp.argsort(codes, stable=True).astype(jnp.int32)
     codes = codes[order]
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -159,7 +178,7 @@ def build_bvh(points: jnp.ndarray, *, dims: int = 3, lo=None,
         shift_hi = jnp.concatenate([prev_hi[h:], prev_hi[-1:].repeat(min(h, n), 0)])
         lo_t.append(jnp.minimum(prev_lo, shift_lo[:n]))
         hi_t.append(jnp.maximum(prev_hi, shift_hi[:n]))
-    lo_tab = jnp.stack(lo_t)  # (levels+1, n, 3)
+    lo_tab = jnp.stack(lo_t)  # (levels+1, n, D)
     hi_tab = jnp.stack(hi_t)
 
     span = last - first + 1
@@ -170,7 +189,7 @@ def build_bvh(points: jnp.ndarray, *, dims: int = 3, lo=None,
     box_hi = jnp.maximum(hi_tab[k, a], hi_tab[k, b])
 
     return BVH(pts_sorted=pts_sorted, order=order, left=left, right=right,
-               box_lo=box_lo, box_hi=box_hi)
+               box_lo=box_lo, box_hi=box_hi, first=first, last=last)
 
 
 @jax.jit
@@ -205,139 +224,292 @@ def max_leaf_depth(left: jnp.ndarray, right: jnp.ndarray) -> jnp.ndarray:
 class WavefrontSpec:
     """Static plan for the wavefront engine. Hashable → jit-static/cache key.
 
-    ``capacity`` is the frontier slot count per level, calibrated at build
-    time by probing (traversal structure depends only on geometry, never on
-    the sweep payload, so a capacity that survives one payload-free probe
-    survives every later sweep bit-for-bit). ``tile`` is the expansion
-    granularity: each level is processed in ``ceil(live / tile)`` tiles, so
-    per-level cost tracks the *live* frontier, not the capacity — capacity
-    is storage, not work.
+    ``capacity`` is the frontier slot count per level, in (query-block,
+    node) *entries* — each entry carries ``batch`` consecutive queries.
+    It is calibrated at build time from the measured per-level peak of a
+    payload-free probe traversal (kept in ``peak``): the exact traversal's
+    frontier is a superset of every terminated / payload sweep's over the
+    same geometry, so ``capacity = round_up(peak, tile)`` fits all later
+    sweeps bit-for-bit, with no overshoot beyond tile rounding. ``tile``
+    is the expansion granularity: each level is processed in
+    ``ceil(live / tile)`` tiles, so per-level cost tracks the *live*
+    frontier, not the capacity — capacity is storage, not work.
+
+    ``terminate`` opts the stage-2 sweeps into payload-bounded early
+    termination (DESIGN.md §13); ``prune_dtype`` ("bf16" | "f32") selects
+    the AABB prune precision — bf16 boxes are ε-dilated then *outward*
+    rounded, so the bf16 prune admits a superset of the f32 prune and the
+    exact f32 sphere refine keeps labels bit-identical.
     """
     eps: float
     n: int                # leaf count (= query count for sweep_sorted)
-    capacity: int         # frontier slots, multiple of tile
+    capacity: int         # frontier entry slots, multiple of tile
     tile: int             # frontier entries expanded per inner step
     max_levels: int       # BFS level bound (Karras depth ≤ 64)
+    batch: int = 8        # queries per (query-block, node) entry
+    terminate: bool = True       # payload-bounded early termination
+    prune_dtype: str = "bf16"    # AABB prune precision ("bf16" | "f32")
+    peak: int = 0         # measured per-level peak entries (telemetry)
+
+
+def _bf16_directed(x: jnp.ndarray, *, up: bool) -> jnp.ndarray:
+    """Round f32 ``x`` to bf16 toward +∞ (``up``) or −∞, exact when already
+    representable. Outward-rounding the ε-dilated prune boxes is what makes
+    the bf16 prune *provably* conservative: the kernel compares a round-to-
+    nearest bf16 query against these boxes, RN is monotone, and the box
+    endpoints are bf16-representable — so any point inside the f32 box is
+    inside the bf16 box, and the exact f32 sphere refine sees a superset of
+    candidates (never fewer). Finite inputs only (data ± ε is far from the
+    f32 range edge)."""
+    b = x.astype(jnp.bfloat16)
+    back = b.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(b, jnp.uint16)
+    mag_zero = (bits & jnp.uint16(0x7FFF)) == 0
+    neg = (bits & jnp.uint16(0x8000)) != 0
+    one = jnp.uint16(1)
+    if up:
+        need = back < x
+        stepped = jnp.where(mag_zero, jnp.uint16(0x0001),
+                            jnp.where(neg, bits - one, bits + one))
+    else:
+        need = back > x
+        stepped = jnp.where(mag_zero, jnp.uint16(0x8001),
+                            jnp.where(neg, bits + one, bits - one))
+    return jnp.where(need,
+                     jax.lax.bitcast_convert_type(stepped, jnp.bfloat16), b)
+
+
+def _node_prune_boxes(bvh: BVH, eps, prune_dtype: str):
+    """ε-dilated prune boxes over the combined node id space (2n−1, D):
+    internal nodes 0..n−2 from the fitted AABBs, leaf (n−1)+i from its
+    point. With ``prune_dtype="bf16"`` the dilated bounds are outward-
+    rounded to bf16 (see :func:`_bf16_directed`) and *stored* bf16 — half
+    the per-level gather traffic; the kernel widens them back to f32
+    exactly, so TPU tile shapes stay f32."""
+    eps_f = jnp.float32(eps)
+    lo = jnp.concatenate([bvh.box_lo, bvh.pts_sorted], axis=0) - eps_f
+    hi = jnp.concatenate([bvh.box_hi, bvh.pts_sorted], axis=0) + eps_f
+    if prune_dtype == "bf16":
+        return _bf16_directed(lo, up=False), _bf16_directed(hi, up=True)
+    return lo, hi
+
+
+def _node_payload_min(bvh: BVH, croot_sorted: jnp.ndarray) -> jnp.ndarray:
+    """Min core-root payload per combined node (2n−1,) — the early-
+    termination bound. Every Karras internal node covers the contiguous
+    sorted-leaf range [first, last], so an O(n log n) sparse min table
+    answers all n−1 range minima at once; recomputed per sweep (the
+    payload changes every hooking round) but cheap next to one traversal
+    level."""
+    n = croot_sorted.shape[0]
+    levels = max(1, int(np.ceil(np.log2(max(n, 2)))))
+    tab = [croot_sorted]
+    for k in range(1, levels + 1):
+        h = 1 << (k - 1)
+        prev = tab[-1]
+        shift = jnp.concatenate([prev[h:], prev[-1:].repeat(min(h, n), 0)])
+        tab.append(jnp.minimum(prev, shift[:n]))
+    tabs = jnp.stack(tab)
+    span = bvh.last - bvh.first + 1
+    k = 31 - jax.lax.clz(span)
+    internal = jnp.minimum(tabs[k, bvh.first],
+                           tabs[k, bvh.last - (1 << k) + 1])
+    return jnp.concatenate([internal, croot_sorted])
 
 
 def wavefront_sweep(bvh: BVH, queries: jnp.ndarray, croot_leaf: jnp.ndarray,
                     *, eps: float, eps2: float, capacity: int,
-                    tile: int = 8192, max_levels: int = MAX_LEVELS,
+                    tile: int = 8192, batch: int = 8,
+                    prune_dtype: str = "bf16", bound=None,
+                    max_levels: int = MAX_LEVELS,
                     stop_on_overflow: bool = False,
                     backend: str | None = None):
-    """Level-synchronous BVH traversal for all ``queries`` at once.
+    """Level-synchronous batched BVH traversal for all ``queries`` at once.
 
-    Instead of one stack per query stepping in lockstep, a single work queue
-    of (query, node) pairs is expanded level by level: every live pair emits
-    its two children through the fused prune/refine kernel
-    (``ops.bvh_sweep``), leaf hits are accumulated immediately
-    (scatter-add / scatter-min by query), and surviving internal children
-    are compacted (cumsum prefix + running offset) into the next frontier.
-    Each level runs as ``ceil(live / tile)`` fixed-shape inner steps — a
-    dynamic trip count — so the total cost tracks the number of genuinely
-    overlapping pairs; per-query divergence only changes *where* in the
-    queue work sits, never how long a step takes.
+    Instead of one stack per query stepping in lockstep, a single work
+    queue of (query-block, node) entries — each carrying ``batch``
+    consecutive queries — is expanded level by level: every live entry
+    emits its two children through the fused prune/refine kernel
+    (``ops.bvh_batch_sweep``), leaf hits are accumulated immediately
+    (scatter-add / scatter-min by block row), and children with at least
+    one *useful* query column are compacted (cumsum prefix + running
+    offset) into the next frontier. Batching shrinks the frontier and
+    every gather / compaction scatter around the kernel ~``batch``× while
+    the kernel math stays dense tile work. Each level runs as
+    ``ceil(live / tile)`` fixed-shape inner steps — a dynamic trip count —
+    so total cost tracks the number of genuinely overlapping entries.
 
-    queries    (nq, 3) f32 — arbitrary query points (need not be the leaves)
+    queries    (nq, D) f32 — consecutive queries share a frontier entry,
+               so pass them in a locality-preserving order (the Morton-
+               sorted leaves are the ideal blocking)
     croot_leaf (n,) int32  — per *leaf* payload: root if core else INT32_MAX
-    Returns (counts (nq,), minroot (nq,), overflow ()): ``overflow`` is True
-    iff some level produced more than ``capacity`` pushes (entries beyond
-    capacity are dropped, so results are then untrustworthy — calibrate with
-    a probe, or regrow and restart, before believing them;
+    bound      optional (nq,) int32 — payload-bounded early termination:
+               each query's min-root accumulator starts at ``bound`` and a
+               subtree is skipped for a column once its payload min cannot
+               lower that column's current accumulator, so the returned
+               minroot is *exactly* ``min(exact minroot, bound)`` (proof:
+               any ε-ball leaf with croot below the final accumulator keeps
+               every ancestor column useful — accumulators only decrease —
+               so that leaf is reached). Counts become partial (prune-order
+               dependent); pass ``bound=None`` (default) for the exact
+               geometric traversal where counts AND minroot are exact.
+
+    Returns (counts (nq,), minroot (nq,), overflow (), hist (max_levels,)):
+    ``hist[l]`` is the live entry count entering level ``l`` (−1 past the
+    last executed level) — the telemetry behind peak-based capacity
+    calibration and the roofline figure. ``overflow`` is True iff some
+    level produced more than ``capacity`` pushes (entries beyond capacity
+    are dropped, so results are then untrustworthy — calibrate with a
+    probe, or regrow and restart, before believing them;
     ``stop_on_overflow`` abandons the traversal at the first overflowing
     level, which makes calibration probes cheap).
     """
     n = bvh.pts_sorted.shape[0]
+    d = bvh.pts_sorted.shape[1]
     nq = queries.shape[0]
     n_int = n - 1
+    nb = -(-nq // batch)
+    nq_p = nb * batch
+    prune_payload = bound is not None
+    bf16 = prune_dtype == "bf16"
     tile = min(tile, capacity)
     C = (capacity // tile) * tile
-    eps_f = jnp.float32(eps)
     eps2_f = jnp.float32(eps2)
     lane = jnp.arange(tile, dtype=jnp.int32)
+    int_min = jnp.iinfo(jnp.int32).min
+
+    # Queries grouped into nb blocks of `batch`; pad queries sit at −BIG
+    # (outside every dilated box, ∞ distance) so they never hit or push.
+    qblocks = jnp.pad(queries.astype(jnp.float32),
+                      ((0, nq_p - nq), (0, 0)),
+                      constant_values=-grid_mod.BIG).reshape(nb, batch, d)
+    node_lo, node_hi = _node_prune_boxes(bvh, eps, prune_dtype)
+    if prune_payload:
+        node_min = _node_payload_min(bvh, croot_leaf)
+        minroot0 = jnp.pad(bound.astype(jnp.int32), (0, nq_p - nq),
+                           constant_values=int_min).reshape(nb, batch)
+    else:
+        node_min = None
+        minroot0 = jnp.full((nb, batch), INT_MAX, jnp.int32)
 
     def level(carry):
-        fq, fn, f, counts, minroot, ovf, lvl = carry
+        fb, fn, f, counts, minroot, ovf, lvl, hist = carry
+        hist = hist.at[lvl].set(f)
         n_tiles = (f + tile - 1) // tile
 
         def expand_tile(t, inner):
-            off, fq2, fn2, counts, minroot = inner
+            off, fb2, fn2, counts, minroot = inner
             start = t * tile
-            sq = jax.lax.dynamic_slice(fq, (start,), (tile,))
+            sb = jax.lax.dynamic_slice(fb, (start,), (tile,))
             sn = jax.lax.dynamic_slice(fn, (start,), (tile,))
             live = start + lane < f
             node_i = jnp.clip(sn, 0, max(n_int - 1, 0))
-            cq = jnp.concatenate([sq, sq])                   # (2·tile,)
+            cb = jnp.concatenate([sb, sb])                   # (2·tile,)
             cn = jnp.concatenate([bvh.left[node_i], bvh.right[node_i]])
-            cvalid = jnp.concatenate([live, live])
+            clive = jnp.concatenate([live, live])
             is_leaf = cn >= n_int
             leaf_id = jnp.clip(cn - n_int, 0, n - 1)
-            c_int = jnp.clip(cn, 0, max(n_int - 1, 0))
+            q = qblocks[jnp.clip(cb, 0, nb - 1)]             # (2t, B, D)
+            lo = jnp.where(clive[:, None],
+                           node_lo[cn].astype(jnp.float32), grid_mod.BIG)
+            hi = jnp.where(clive[:, None],
+                           node_hi[cn].astype(jnp.float32), -grid_mod.BIG)
             pt = bvh.pts_sorted[leaf_id]
-            blo = jnp.where(is_leaf[:, None], pt, bvh.box_lo[c_int])
-            bhi = jnp.where(is_leaf[:, None], pt, bvh.box_hi[c_int])
             cr = croot_leaf[leaf_id]
-            qpt = queries[jnp.clip(cq, 0, nq - 1)]
-            hit, mr, push = kops.bvh_sweep(qpt, blo, bhi, cr, is_leaf,
-                                           cvalid, eps_f, eps2_f,
-                                           backend=backend)
-            qsafe = jnp.where(cvalid, cq, nq)                # nq drops
-            counts = counts.at[qsafe].add(hit, mode="drop")
-            minroot = minroot.at[qsafe].min(mr, mode="drop")
+            lf = jnp.where(clive, is_leaf, False)
+            if prune_payload:
+                nm = node_min[cn]
+                bnd = minroot[jnp.clip(cb, 0, nb - 1)]       # (2t, B)
+            else:
+                nm = jnp.zeros((2 * tile,), jnp.int32)
+                bnd = jnp.zeros((2 * tile, batch), jnp.int32)
+            hit, mr, push = kops.bvh_batch_sweep(
+                q, lo, hi, pt, cr, nm, lf, bnd, eps2_f,
+                bf16_prune=bf16, prune_payload=prune_payload,
+                backend=backend)
+            bsafe = jnp.where(clive, cb, nb)                 # nb drops
+            counts = counts.at[bsafe].add(hit, mode="drop")
+            minroot = minroot.at[bsafe].min(mr, mode="drop")
             # compact this tile's pushes behind the previous tiles' (off)
-            pos = jnp.cumsum(push.astype(jnp.int32)) - 1
+            pos = jnp.cumsum(push) - 1
             tot = pos[-1] + 1
-            tgt = jnp.where(push, off + pos, C)              # ≥ C drops
-            fq2 = fq2.at[tgt].set(cq, mode="drop")
+            tgt = jnp.where(push != 0, off + pos, C)         # ≥ C drops
+            fb2 = fb2.at[tgt].set(cb, mode="drop")
             fn2 = fn2.at[tgt].set(cn, mode="drop")
-            return off + tot, fq2, fn2, counts, minroot
+            return off + tot, fb2, fn2, counts, minroot
 
-        off, fq2, fn2, counts, minroot = jax.lax.fori_loop(
+        off, fb2, fn2, counts, minroot = jax.lax.fori_loop(
             0, n_tiles, expand_tile,
-            (jnp.int32(0), jnp.full((C,), nq, jnp.int32),
+            (jnp.int32(0), jnp.full((C,), nb, jnp.int32),
              jnp.zeros((C,), jnp.int32), counts, minroot))
-        return (fq2, fn2, jnp.minimum(off, C), counts, minroot,
-                ovf | (off > C), lvl + 1)
+        return (fb2, fn2, jnp.minimum(off, C), counts, minroot,
+                ovf | (off > C), lvl + 1, hist)
 
     def cond(carry):
-        _, _, f, _, _, ovf, lvl = carry
+        _, _, f, _, _, ovf, lvl, _ = carry
         go = jnp.logical_and(f > 0, lvl < max_levels)
         if stop_on_overflow:
             go = jnp.logical_and(go, ~ovf)
         return go
 
     slot = jnp.arange(C, dtype=jnp.int32)
-    nq_live = min(nq, C)
-    fq0 = jnp.where(slot < nq_live, slot, nq)
+    nb_live = min(nb, C)
+    fb0 = jnp.where(slot < nb_live, slot, nb)
     fn0 = jnp.zeros((C,), jnp.int32)                         # root
-    carry0 = (fq0, fn0, jnp.int32(nq_live),
-              jnp.zeros((nq,), jnp.int32),
-              jnp.full((nq,), INT_MAX, jnp.int32),
-              jnp.bool_(nq > C), jnp.int32(0))
-    _, _, _, counts, minroot, ovf, _ = jax.lax.while_loop(cond, level, carry0)
-    return counts, minroot, ovf
+    carry0 = (fb0, fn0, jnp.int32(nb_live),
+              jnp.zeros((nb, batch), jnp.int32), minroot0,
+              jnp.bool_(nb > C), jnp.int32(0),
+              jnp.full((max_levels,), -1, jnp.int32))
+    _, _, _, counts, minroot, ovf, _, hist = jax.lax.while_loop(
+        cond, level, carry0)
+    return (counts.reshape(-1)[:nq], minroot.reshape(-1)[:nq], ovf, hist)
 
 
 @functools.lru_cache(maxsize=64)
 def _wave_fns(spec: WavefrontSpec, backend: str | None):
-    """(sweep, sweep_sorted, probe) for one wavefront plan. The queries of
-    ``sweep_sorted`` are the Morton-sorted leaves themselves, so the engine
-    joins the sorted-layout round driver exactly like the CSR grid."""
+    """(sweep, sweep_sorted, sweep_counts, probe, frontier) for one
+    wavefront plan. The queries of the sorted-layout entry points are the
+    Morton-sorted leaves themselves, so the engine's own order is both the
+    sorted layout *and* the batching layout (consecutive leaves share a
+    frontier entry).
+
+    Exactness contract (DESIGN.md §13): ``sweep`` and ``sweep_counts`` run
+    non-terminated — counts AND minroot exact. ``sweep_sorted`` terminates
+    (when the spec says so) with ``bound = croot_sorted``: its minroot is
+    exactly ``min(exact, croot)``, which equals the exact value on every
+    row the hooking rounds read (core rows: the self-hit already puts
+    croot in the exact min) and on every row the border sweep reads
+    (non-core rows: croot = INT32_MAX, no clipping) — but its *counts*
+    are partial. Stage 1 must therefore go through ``sweep_counts``
+    (``dbscan`` prefers it automatically whenever it is advertised; the
+    generic sorted stage-1 fallback — an all-INT32_MAX payload through
+    ``sweep_sorted`` — would see an all-INT32_MAX termination bound with
+    an all-INT32_MAX payload min and traverse nothing)."""
     n = spec.n
     kw = dict(eps=spec.eps, eps2=spec.eps * spec.eps, capacity=spec.capacity,
-              tile=spec.tile, max_levels=spec.max_levels, backend=backend)
+              tile=spec.tile, batch=spec.batch, prune_dtype=spec.prune_dtype,
+              max_levels=spec.max_levels, backend=backend)
+    int_min = jnp.int32(jnp.iinfo(jnp.int32).min)
 
     @jax.jit
     def sweep_sorted(state: BVHState, croot_sorted):
-        counts, minroot, _ = wavefront_sweep(
-            state.bvh, state.bvh.pts_sorted, croot_sorted, **kw)
+        bound = croot_sorted if spec.terminate else None
+        counts, minroot, _, _ = wavefront_sweep(
+            state.bvh, state.bvh.pts_sorted, croot_sorted, bound=bound, **kw)
         return counts, minroot
+
+    @jax.jit
+    def sweep_counts(state: BVHState):
+        counts, _, _, _ = wavefront_sweep(
+            state.bvh, state.bvh.pts_sorted,
+            jnp.full((n,), INT_MAX, jnp.int32), **kw)
+        return counts
 
     @jax.jit
     def sweep(state: BVHState, core, root):
         order = state.bvh.order
         croot_s = kops.fuse_core_root(core[order], root[order])
-        counts_s, minroot_s, _ = wavefront_sweep(
+        counts_s, minroot_s, _, _ = wavefront_sweep(
             state.bvh, state.bvh.pts_sorted, croot_s, **kw)
         counts = jnp.zeros((n,), jnp.int32).at[order].set(counts_s)
         minroot = jnp.full((n,), INT_MAX, jnp.int32).at[order].set(minroot_s)
@@ -345,26 +517,74 @@ def _wave_fns(spec: WavefrontSpec, backend: str | None):
 
     @jax.jit
     def probe(state: BVHState):
-        _, _, ovf = wavefront_sweep(
+        _, _, ovf, hist = wavefront_sweep(
             state.bvh, state.bvh.pts_sorted,
             jnp.full((n,), INT_MAX, jnp.int32), stop_on_overflow=True, **kw)
-        return ovf
+        return ovf, hist
 
-    return sweep, sweep_sorted, probe
+    @jax.jit
+    def fsweep(state: BVHState, croot_s, qroot_s, changed_s, pending):
+        # Early termination IS the frontier compaction here: a block whose
+        # every query is non-core (bound = INT32_MIN, nothing can be below
+        # it) or already at the tree-wide payload min dies at the root, so
+        # level 0 touches nb entries and deeper levels only the live merge
+        # seam. ``pending`` passes through untouched — the payload bound
+        # subsumes the changed-tile bookkeeping the grid engine needs.
+        bound = jnp.where(qroot_s >= 0, croot_s, int_min)
+        _, m, _, _ = wavefront_sweep(
+            state.bvh, state.bvh.pts_sorted, croot_s, bound=bound, **kw)
+        m = jnp.where(qroot_s >= 0, m, INT_MAX)
+        tree_min = jnp.min(croot_s)
+        nb = -(-n // spec.batch)
+        live_col = (qroot_s >= 0) & (croot_s > tree_min)
+        n_live = jnp.sum(jnp.any(
+            jnp.pad(live_col, (0, nb * spec.batch - n)).reshape(
+                nb, spec.batch), axis=1).astype(jnp.int32))
+        return m, pending, n_live
+
+    @jax.jit
+    def fborder(state: BVHState, croot_s, core_s):
+        # Border attachment: only non-core rows consume minroot, so core
+        # columns park at bound = INT32_MIN and coreless subtrees
+        # (payload min = INT32_MAX) are never entered.
+        bound = jnp.where(core_s, int_min, INT_MAX)
+        _, m, _, _ = wavefront_sweep(
+            state.bvh, state.bvh.pts_sorted, croot_s, bound=bound, **kw)
+        return jnp.where(core_s, INT_MAX, m)
+
+    frontier = engines.FrontierPlan(n_tiles=-(-n // spec.batch),
+                                    sweep=fsweep, border=fborder)
+    return sweep, sweep_sorted, sweep_counts, probe, frontier
+
+
+def wavefront_levels(eng: engines.Engine, *,
+                     backend: str | None = None) -> np.ndarray:
+    """Per-level live frontier entry counts of ``eng``'s exact traversal —
+    the telemetry behind peak-based capacity calibration, surfaced for the
+    roofline figure and the bench's per-level frontier report. Returns a
+    1-D numpy int array with one entry per executed BFS level."""
+    spec = eng.meta
+    if not isinstance(spec, WavefrontSpec):
+        raise ValueError("wavefront_levels needs an engine='bvh' Engine")
+    _, hist = _wave_fns(spec, backend)[3](eng.state)
+    h = np.asarray(hist)
+    return h[h >= 0]
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-# Calibrated WavefrontSpecs by (n, eps, dims) -> (data fingerprint, spec):
-# the spec is payload-independent, so a later build over the *same data*
-# (matching fingerprint) can reuse it outright — zero probes — and a
-# same-shape build over different data needs only one certification probe
-# (falling back to recalibration from the cached capacity if it fails,
-# since similar shapes rarely need less). This is what makes repeated
-# builds (benchmark warmups, serve re-snapshots, minPts re-runs over a
-# fixed corpus) pay the probe/compile cost once.
+# Calibrated WavefrontSpecs by (n, eps, dims, batch, prune_dtype) ->
+# (data fingerprint, spec): the spec is payload-independent, so a later
+# build over the *same data* (matching fingerprint) can reuse it outright —
+# zero probes — and a same-shape build over different data starts its
+# probe schedule at the cached capacity (one probe in the common case,
+# recalibrating from the measured peak either way). This is what makes
+# repeated builds (benchmark warmups, serve re-snapshots, minPts re-runs
+# over a fixed corpus) pay the probe/compile cost once. ``terminate`` is
+# deliberately absent from the key: it never changes traversal geometry,
+# so both modes share one calibration.
 _SPEC_CACHE: dict = {}
 _PROBE_GROWTH = 4   # coarse probe schedule: each probed capacity is a new
 #                     compiled program, so grow 4x per probe and refine one
@@ -382,18 +602,25 @@ def _data_fingerprint(points) -> tuple:
 
 def make_bvh_engine(points, eps: float, *, dims: int | None = None,
                     backend: str | None = None,
-                    spec: WavefrontSpec | None = None) -> engines.Engine:
+                    spec: WavefrontSpec | None = None, batch: int = 8,
+                    terminate: bool = True,
+                    prune_dtype: str = "bf16") -> engines.Engine:
     """Build the wavefront BVH engine (engine="bvh").
 
     Build = LBVH construction + frontier-capacity calibration: capacity
     grows by ``_PROBE_GROWTH`` until one payload-free probe traversal
-    fits, which (traversal structure being payload-independent) guarantees
-    every later sweep fits too. Each probed capacity is a distinct
-    compiled program, so probes — not the traversals — dominate cold build
-    time; the schedule is deliberately coarse and successful specs are
-    cached per (n, ε, dims) so same-shape rebuilds collapse to a single
-    certification probe. Pass a previous ``Engine.meta`` as ``spec`` to
-    force that collapse explicitly (paper §V-D build amortization).
+    fits, then the final capacity is set from the probe's *measured*
+    per-level peak (``round_up(peak, tile)`` — exact traversal entries are
+    a superset of every later sweep's, so the peak-sized frontier is
+    guaranteed to fit bit-for-bit, replacing the old 4x-growth overshoot).
+    Each probed capacity is a distinct compiled program, so probes — not
+    the traversals — dominate cold build time; the schedule is
+    deliberately coarse and calibrated specs are cached per
+    (n, ε, dims, batch, prune_dtype) so same-shape rebuilds collapse to a
+    single probe. Pass a previous ``Engine.meta`` as ``spec`` to skip
+    calibration outright (paper §V-D build amortization) — the spec's own
+    knobs then win over the ``batch=`` / ``terminate=`` / ``prune_dtype=``
+    arguments.
     """
     from .neighbors import infer_dims
     points = jnp.asarray(points, jnp.float32)
@@ -402,6 +629,9 @@ def make_bvh_engine(points, eps: float, *, dims: int | None = None,
         raise ValueError("BVH engines need n >= 2 points")
     if dims is None:
         dims = infer_dims(np.asarray(points))
+    if prune_dtype not in ("bf16", "f32"):
+        raise ValueError(f"unknown prune_dtype {prune_dtype!r}; "
+                         "expected 'bf16' or 'f32'")
     bvh = jax.jit(build_bvh, static_argnames=("dims",))(points, dims=dims)
     state = BVHState(bvh=bvh, points=points)
     if spec is not None:
@@ -412,32 +642,35 @@ def make_bvh_engine(points, eps: float, *, dims: int | None = None,
         # sweeps discard the overflow flag (capacity is a build-time
         # contract), so a reused spec must be re-certified on this tree —
         # one cheap probe, no doubling loop
-        if bool(_wave_fns(spec, backend)[2](state)):
+        ovf, _ = _wave_fns(spec, backend)[3](state)
+        if bool(ovf):
             raise ValueError(
                 f"reused WavefrontSpec (capacity={spec.capacity}) "
                 "overflows on this dataset — it was calibrated for "
                 "different points; rebuild without spec=")
     else:
-        cache_key = (n, float(eps), dims)
+        nb = -(-n // batch)
+        cache_key = (n, float(eps), dims, batch, prune_dtype)
         fp = _data_fingerprint(points)
         cached_fp, cached = _SPEC_CACHE.get(cache_key, (None, None))
         if cached is not None and cached_fp == fp:
-            spec = cached        # same data — calibrated result holds as-is
-        elif cached is not None and not bool(
-                _wave_fns(cached, backend)[2](state)):
-            spec = cached        # same shape, new data: one probe certified
-            _SPEC_CACHE[cache_key] = (fp, spec)
+            # same data — calibrated result holds as-is (modulo the
+            # geometry-free terminate knob)
+            spec = dataclasses.replace(cached, terminate=terminate)
         else:
-            tile = min(_WAVE_TILE, max(512, _round_up(n, 512)))
-            floor = max(_round_up(2 * n, tile), 2 * tile)
-            # restart from the cached capacity when certification failed —
-            # this data needs more, never less probing than its shape-twin
-            cap = max(floor, cached.capacity * _PROBE_GROWTH if cached else 0)
-            cap_max = max(4 * n * n, 1 << 20)
+            tile = min(_WAVE_TILE, max(512, _round_up(nb, 512)))
+            floor = max(_round_up(2 * nb, tile), 2 * tile)
+            # start from the cached capacity on a shape-twin — usually the
+            # first probe fits and doubles as the certification probe
+            cap = max(floor, cached.capacity if cached else 0)
+            cap_max = max(4 * nb * n, 1 << 20)
             while True:
-                spec = WavefrontSpec(eps=float(eps), n=n, capacity=cap,
-                                     tile=tile, max_levels=MAX_LEVELS)
-                if not bool(_wave_fns(spec, backend)[2](state)):
+                pspec = WavefrontSpec(eps=float(eps), n=n, capacity=cap,
+                                      tile=tile, max_levels=MAX_LEVELS,
+                                      batch=batch, terminate=terminate,
+                                      prune_dtype=prune_dtype)
+                ovf, hist = _wave_fns(pspec, backend)[3](state)
+                if not bool(ovf):
                     break
                 if cap >= cap_max:
                     raise RuntimeError(
@@ -445,21 +678,15 @@ def make_bvh_engine(points, eps: float, *, dims: int | None = None,
                         f"{cap} still overflows for n={n}, eps={eps}) — the "
                         "data/ε pair is denser than O(n²); use engine='brute'")
                 cap = min(cap * _PROBE_GROWTH, _round_up(cap_max, tile))
-            # the 4x schedule (and the restart boost) can overshoot; a
-            # capacity is storage on TPU but compaction-scatter *work* on
-            # the ref backend, so one refining probe claws a 2x back —
-            # skipped only when the accepted capacity already sits at the
-            # natural floor (no overshoot, and probes dominate cold build)
-            if cap > floor:
-                half = WavefrontSpec(eps=float(eps), n=n,
-                                     capacity=_round_up(cap // 2, tile),
-                                     tile=tile, max_levels=MAX_LEVELS)
-                if not bool(_wave_fns(half, backend)[2](state)):
-                    spec = half
+            peak = int(np.asarray(hist).max())
+            spec = dataclasses.replace(
+                pspec, capacity=max(_round_up(peak, tile), tile), peak=peak)
             _SPEC_CACHE[cache_key] = (fp, spec)
-    sweep, sweep_sorted, _ = _wave_fns(spec, backend)
-    return engines.Engine("bvh", state, sweep, meta=spec,
-                          sweep_sorted=sweep_sorted, order=bvh.order)
+    sweep, sweep_sorted, sweep_counts, _, frontier = _wave_fns(spec, backend)
+    return engines.Engine(
+        "bvh", state, sweep, meta=spec, sweep_sorted=sweep_sorted,
+        order=bvh.order, sweep_counts=sweep_counts,
+        sweep_frontier=frontier if spec.terminate else None)
 
 
 # ---------------------------------------------------------------------------
@@ -530,7 +757,8 @@ def _stack_sweep_fn(eps: float, chunk: int, early_stop: int, stack: int):
         n_pad = ((n + chunk - 1) // chunk) * chunk
         pad = n_pad - n
         q = jnp.pad(state.points, ((0, pad), (0, 0)),
-                    constant_values=grid_mod.BIG).reshape(-1, chunk, 3)
+                    constant_values=grid_mod.BIG).reshape(
+                        -1, chunk, state.points.shape[1])
         counts, minroot = jax.lax.map(jax.vmap(traverse), q)
         return counts.reshape(-1)[:n], minroot.reshape(-1)[:n]
 
@@ -575,8 +803,10 @@ def make_bvh_stack_engine(points, eps: float, *, dims: int | None = None,
 
 
 def _build_wavefront(points, eps, *, backend=None, chunk=2048, dims=None,
-                     spec=None):
-    return make_bvh_engine(points, eps, dims=dims, backend=backend, spec=spec)
+                     spec=None, batch=8, terminate=True, prune_dtype="bf16"):
+    return make_bvh_engine(points, eps, dims=dims, backend=backend, spec=spec,
+                           batch=batch, terminate=terminate,
+                           prune_dtype=prune_dtype)
 
 
 def _build_stack(points, eps, *, backend=None, chunk=2048, dims=None,
@@ -587,9 +817,12 @@ def _build_stack(points, eps, *, backend=None, chunk=2048, dims=None,
 
 engines.register_engine(
     "bvh", _build_wavefront,
-    doc="LBVH with wavefront (level-compacted work queue) traversal; "
-        "sorted-layout fast path over the Morton-ordered leaves",
-    capabilities=("sweep_sorted",))
+    doc="LBVH with batched wavefront (level-compacted work queue) "
+        "traversal: query batching, payload-bounded early termination and "
+        "a bf16 prune / f32 refine split (supports batch=, terminate=, "
+        "prune_dtype=); sorted-layout fast path over the Morton-ordered "
+        "leaves",
+    capabilities=("sweep_sorted", "sweep_counts", "sweep_frontier"))
 engines.register_engine(
     "bvh-stack", _build_stack,
     doc="LBVH with lockstep per-query stack traversal (FDBSCAN baseline; "

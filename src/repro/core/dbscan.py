@@ -140,7 +140,14 @@ def _sorted_stage1_fn(sweep_sorted):
 
 @functools.lru_cache(maxsize=64)
 def _counts_stage1_fn(sweep_counts):
-    """Stage 1 through the counts-only sweep (no payload plane at all)."""
+    """Stage 1 through the counts-only sweep (no payload plane at all).
+
+    For payload-terminating engines (wavefront BVH, DESIGN.md §13.2) this
+    path is mandatory, not a fast path: their ``sweep_sorted`` counts are
+    partial (traversal stops once the payload bound can't improve), and
+    the generic ``_sorted_stage1_fn`` fallback's all-empty payload would
+    terminate everything — such engines must advertise ``sweep_counts``.
+    """
     @jax.jit
     def stage1(state, order):
         n = order.shape[0]

@@ -20,7 +20,13 @@ do through the fields of the :class:`Engine` it builds:
                        whose ``EngineSpec.capabilities`` lack it *before*
                        paying for a build;
   * ``sweep_counts`` — optional counts-only stage-1 sweep in sorted layout
-                       (skips the payload plane the stage discards);
+                       (skips the payload plane the stage discards). For
+                       engines whose payload sweep early-terminates on the
+                       payload (the wavefront BVH, DESIGN.md §13.2) this is
+                       not merely an optimization: ``sweep_sorted`` counts
+                       are *partial* under termination, so stage 1 must use
+                       this exact traversal — ``dbscan`` auto-prefers it
+                       whenever advertised;
   * ``sweep_frontier`` — optional frontier-compacted stage-2 rounds
                        (DESIGN.md §11): a :class:`FrontierPlan` that lets
                        ``dbscan(hook_loop="frontier")`` re-sweep only the

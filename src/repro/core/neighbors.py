@@ -73,6 +73,11 @@ class GridState(NamedTuple):
 
 
 def infer_dims(points_np: np.ndarray) -> int:
+    """Data dimensionality: the column count, except for the paper's 3-col
+    convention where 2D data rides in (n, 3) arrays with z = 0."""
+    d = points_np.shape[1]
+    if d != 3:
+        return d
     return 2 if np.all(points_np[:, 2] == 0) else 3
 
 
@@ -371,7 +376,7 @@ def _brute_sweep_fn(eps2: float, chunk: int, backend: str | None):
     def sweep(points, core, root):
         n = points.shape[0]
         n_pad = ((n + chunk - 1) // chunk) * chunk
-        q = _pad0(points, n_pad, BIG).reshape(-1, chunk, 3)
+        q = _pad0(points, n_pad, BIG).reshape(-1, chunk, points.shape[1])
 
         def body(qq):
             return ops.pairwise_sweep(qq, points, core, root,
@@ -390,12 +395,12 @@ def _brute_neighbors_fn(eps2: float, chunk: int):
     def neighbors(points, k_max: int):
         n = points.shape[0]
         n_pad = ((n + chunk - 1) // chunk) * chunk
-        q = _pad0(points, n_pad, BIG).reshape(-1, chunk, 3)
+        q = _pad0(points, n_pad, BIG).reshape(-1, chunk, points.shape[1])
         cand_idx = jnp.arange(n, dtype=jnp.int32)[None, :]
 
         def body(qq):
             d2 = sum((qq[:, None, k] - points[None, :, k]) ** 2
-                     for k in range(3))
+                     for k in range(points.shape[1]))
             return _topk_neighbor_ids(d2 <= eps2, cand_idx, k_max)
 
         idx, cnt = jax.lax.map(body, q)

@@ -256,13 +256,13 @@ def make_bvh_wave_sweep(cand_pts, eps: float, n_cand: int, cfg: DistConfig):
     capacity = -(-int(cfg.bvh_frontier_factor * n_cand) // 512) * 512
     queries = jnp.where(real[:, None], cand_pts, -BIG)
     kw = dict(eps=float(eps), eps2=float(eps) ** 2, capacity=capacity)
-    _, _, overflow = bvh_mod.wavefront_sweep(
+    _, _, overflow, _ = bvh_mod.wavefront_sweep(
         bvh, queries, jnp.full((n_cand,), INT_MAX, jnp.int32),
         stop_on_overflow=True, **kw)
 
     def sweep(croot):
-        counts, m, _ = bvh_mod.wavefront_sweep(bvh, queries,
-                                               croot[bvh.order], **kw)
+        counts, m, _, _ = bvh_mod.wavefront_sweep(bvh, queries,
+                                                  croot[bvh.order], **kw)
         return counts, m
 
     return sweep, overflow

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
-from .bvh_sweep import bvh_sweep as _bvh_kernel
+from .bvh_sweep import bvh_batch_sweep as _bvh_kernel
 from .cross_sweep import cross_sweep as _cross_kernel
 from .csr_sweep import csr_sweep as _csr_kernel
 from .csr_sweep import csr_sweep_counts as _csr_counts_kernel
@@ -243,37 +243,43 @@ def cross_sweep(queries, cands_planar, croot, starts, nblk, eps2, *,
                          interpret=(backend == "interpret"))
 
 
-def bvh_sweep(queries, box_lo, box_hi, croot, leaf, valid, eps, eps2, *,
-              backend=None, block: int = 512):
-    """Wavefront BVH expand step (one breadth-first traversal level).
+def bvh_batch_sweep(queries, dlo, dhi, pt, croot, nmin, leaf, bound, eps2, *,
+                    bf16_prune: bool = True, prune_payload: bool = False,
+                    backend=None, block: int = 256):
+    """Batched wavefront BVH expand step (one breadth-first traversal level
+    of (query-block, node) entries — DESIGN.md §9, §13).
 
-    queries/box_lo/box_hi (f, 3) float, croot (f,) int32, leaf/valid (f,)
-    bool. Leaf children carry their point as a degenerate box (lo = hi).
-    Returns hit (f,) int32 ∈ {0, 1}, minroot (f,) int32, push (f,) bool —
-    see ``ref.bvh_sweep_ref`` for exact semantics. Dead / padded entries are
-    encoded geometrically (query −BIG, box +BIG) so the kernel needs no
-    validity plane; both backends agree bit-for-bit on all three outputs.
+    queries (E, B, D) float, dlo/dhi/pt (E, D) float, croot/nmin/leaf (E,)
+    int32, bound (E, B) int32 — see ``ref.bvh_batch_sweep_ref`` for exact
+    semantics. The prune boxes arrive pre-dilated (and, when ``bf16_prune``,
+    already outward-rounded to bf16 values); the sphere refine is exact f32
+    regardless. Dead / padded entries are encoded geometrically (box lo
+    +BIG / hi −BIG, leaf 0) so the kernel needs no validity plane; both
+    backends agree bit-for-bit on all three outputs.
+    Returns hit (E, B) int32, minroot (E, B) int32, push (E,) int32.
     """
     backend = backend or default_backend()
-    f = queries.shape[0]
-    eps = jnp.asarray(eps, jnp.float32)
+    e = queries.shape[0]
     eps2 = jnp.asarray(eps2, jnp.float32)
+    kw = dict(bf16_prune=bf16_prune, prune_payload=prune_payload)
     if backend == "ref":
-        return _ref.bvh_sweep_ref(queries, box_lo, box_hi, croot, leaf,
-                                  valid, eps, eps2)
-    f_p = _round_up(max(f, 1), block)
-    v3 = valid[:, None]
-    q = _pad_to(jnp.where(v3, queries.astype(jnp.float32), -BIG), f_p, 0, -BIG)
-    lo = _pad_to(jnp.where(v3, box_lo.astype(jnp.float32), BIG), f_p, 0, BIG)
-    hi = _pad_to(jnp.where(v3, box_hi.astype(jnp.float32), BIG), f_p, 0, BIG)
-    cr = _pad_to(jnp.where(valid, croot, INT_MAX).astype(jnp.int32), f_p, 0,
-                 INT_MAX)
-    lf = _pad_to(leaf.astype(jnp.int32), f_p, 0, 0)
-    scal = jnp.stack([eps, eps2]).reshape(1, 2)
+        return _ref.bvh_batch_sweep_ref(queries, dlo, dhi, pt, croot, nmin,
+                                        leaf, bound, eps2, **kw)
+    e_p = _round_up(max(e, 1), block)
+    q = _pad_to(queries.astype(jnp.float32), e_p, 0, -BIG)
+    lo = _pad_to(dlo.astype(jnp.float32), e_p, 0, BIG)
+    hi = _pad_to(dhi.astype(jnp.float32), e_p, 0, -BIG)
+    p = _pad_to(pt.astype(jnp.float32), e_p, 0, BIG)
+    cr = _pad_to(croot.astype(jnp.int32), e_p, 0, INT_MAX)
+    nm = _pad_to(nmin.astype(jnp.int32), e_p, 0, INT_MAX)
+    lf = _pad_to(leaf.astype(jnp.int32), e_p, 0, 0)
+    bd = _pad_to(bound.astype(jnp.int32), e_p, 0, jnp.iinfo(jnp.int32).min)
+    scal = eps2.reshape(1, 1)
     hit, minroot, push = _bvh_kernel(
-        q.T, lo.T, hi.T, cr[None, :], lf[None, :], scal, block=block,
-        interpret=(backend == "interpret"))
-    return hit[:f], minroot[:f], push[:f].astype(bool)
+        jnp.transpose(q, (2, 1, 0)), lo.T, hi.T, p.T, cr[None, :],
+        nm[None, :], lf[None, :], bd.T, scal, block=block,
+        interpret=(backend == "interpret"), **kw)
+    return hit.T[:e], minroot.T[:e], push[:e]
 
 
 def morton_encode(coords, *, dims: int = 3, backend=None, block: int = 1024):

@@ -20,14 +20,16 @@ INT_MAX = jnp.iinfo(jnp.int32).max
 
 
 def _dist2(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
-    """Squared euclidean distance, (..., 3) vs (..., 3) broadcast-safe.
+    """Squared euclidean distance, (..., D) vs (..., D) broadcast-safe.
 
     Math is always f32 regardless of storage dtype (bf16/f16 storage with f32
     compute is the kernel contract; the Pallas kernels cast the same way).
+    The accumulation order (ascending coordinate) matches the kernels', so
+    float results are bit-identical across backends.
     """
     acc = jnp.zeros(jnp.broadcast_shapes(q.shape[:-1], c.shape[:-1]),
                     jnp.float32)
-    for k in range(3):
+    for k in range(q.shape[-1]):
         d = q[..., k].astype(jnp.float32) - c[..., k].astype(jnp.float32)
         acc = acc + d * d
     return acc
@@ -275,33 +277,49 @@ def cross_sweep_ref(queries: jnp.ndarray, cands_planar: jnp.ndarray,
     return counts.reshape(-1), minroot.reshape(-1), mind2.reshape(-1)
 
 
-def bvh_sweep_ref(queries: jnp.ndarray, box_lo: jnp.ndarray,
-                  box_hi: jnp.ndarray, croot: jnp.ndarray, leaf: jnp.ndarray,
-                  valid: jnp.ndarray, eps: jnp.ndarray, eps2: jnp.ndarray):
-    """Wavefront BVH expand step (DESIGN.md §9): one breadth-first level of
-    (query, child-node) pairs through the paper's two-level test — ε-dilated
-    AABB prune for internal children, exact sphere refine for leaves
-    (Algorithm 2 line 6), fused.
+def bvh_batch_sweep_ref(queries: jnp.ndarray, dlo: jnp.ndarray,
+                        dhi: jnp.ndarray, pt: jnp.ndarray,
+                        croot: jnp.ndarray, nmin: jnp.ndarray,
+                        leaf: jnp.ndarray, bound: jnp.ndarray,
+                        eps2: jnp.ndarray, *, bf16_prune: bool,
+                        prune_payload: bool):
+    """Batched wavefront BVH expand step (DESIGN.md §9, §13): one
+    breadth-first level of (query-block, child-node) entries, B queries per
+    entry, through the two-phase test — pre-dilated (optionally bf16,
+    outward-rounded) AABB prune, exact f32 sphere refine for leaves
+    (Algorithm 2 line 6) — plus the early-termination payload prune.
 
-    queries (f, 3) float — query point per expanded pair
-    box_lo  (f, 3) float — child AABB lo (leaf children: the leaf point)
-    box_hi  (f, 3) float — child AABB hi (leaf children: the leaf point)
-    croot   (f,)  int32  — leaf payload: root if core else INT32_MAX
-    leaf    (f,)  bool   — child is a leaf
-    valid   (f,)  bool   — entry is live (frontier slot in use)
-    returns hit (f,) int32 ∈ {0, 1} (leaf within ε),
-            minroot (f,) int32 (croot if hit else INT32_MAX),
-            push (f,) bool (internal child whose dilated box overlaps)
+    queries (E, B, D) float — B batched queries per entry
+    dlo/dhi (E, D) float — pre-dilated prune box (bf16-valued if bf16 prune)
+    pt      (E, D) float — leaf point (internal entries: don't-care)
+    croot   (E,) int32 — leaf payload: root if core else INT32_MAX
+    nmin    (E,) int32 — subtree min payload (payload mode only)
+    leaf    (E,) int32 — 1 iff the child is a leaf
+    bound   (E, B) int32 — per-column running min-root bound
+    returns hit (E, B) int32 ∈ {0, 1} (leaf within ε, exact — independent of
+            the prune dtype), minroot (E, B) int32 (croot if hit else
+            INT32_MAX), push (E,) int32 (internal entry with ≥ 1 useful
+            column: inside the prune box and — payload mode — whose subtree
+            min payload can still lower the column's bound)
     """
-    q = queries.astype(jnp.float32)
-    lo = box_lo.astype(jnp.float32)
-    hi = box_hi.astype(jnp.float32)
-    inside = jnp.all((q >= lo - eps) & (q <= hi + eps), axis=1)
-    d2 = _dist2(q, lo)
-    hit = valid & leaf & (d2 <= eps2)
-    push = valid & ~leaf & inside
-    minroot = jnp.where(hit, croot, INT_MAX).astype(jnp.int32)
-    return hit.astype(jnp.int32), minroot, push
+    q = queries.astype(jnp.float32)                     # (E, B, D)
+    if bf16_prune:
+        qp = q.astype(jnp.bfloat16).astype(jnp.float32)
+    else:
+        qp = q
+    lo = dlo.astype(jnp.float32)[:, None, :]
+    hi = dhi.astype(jnp.float32)[:, None, :]
+    inside = jnp.all((qp >= lo) & (qp <= hi), axis=-1)  # (E, B)
+    d2 = _dist2(q, pt.astype(jnp.float32)[:, None, :])
+    lf = (leaf != 0)[:, None]
+    hit = lf & (d2 <= eps2)
+    minroot = jnp.where(hit, croot[:, None], INT_MAX).astype(jnp.int32)
+    if prune_payload:
+        useful = inside & (nmin[:, None] < bound)
+    else:
+        useful = inside
+    push = (~lf[:, 0]) & jnp.any(useful, axis=1)
+    return hit.astype(jnp.int32), minroot, push.astype(jnp.int32)
 
 
 def morton_encode_ref(coords: jnp.ndarray, dims: int = 3) -> jnp.ndarray:

@@ -1,0 +1,46 @@
+"""Unit tests for the benchmark regression gate (benchmarks/run.py):
+the derived-ratio tolerance and the absolute speedup floors that
+--check-regress enforces on every fresh run."""
+from benchmarks.run import ABS_FLOORS, check_regress
+
+
+def _row(name, case, seconds, derived=""):
+    return {"name": name, "case": case, "seconds": seconds,
+            "derived": derived, "engine": "x"}
+
+
+def test_floor_binds_on_fresh_run_even_with_matching_baseline():
+    # a regenerated baseline with a collapsed ratio must NOT grandfather
+    # the collapse in: the absolute floor fires regardless of the committed
+    # value
+    assert ABS_FLOORS["speedup_vs_stack"] >= 3.0
+    bad = _row("skew", "bvh-wave@n=4096", 1.0, "speedup_vs_stack=1.55")
+    problems = check_regress([bad], [bad], regress_tol=10.0, ratio_tol=10.0)
+    assert any("absolute floor" in p for p in problems)
+
+
+def test_floor_binds_without_baseline_case():
+    bad = _row("skew", "bvh-wave@n=4096", 1.0, "speedup_vs_stack=2.99")
+    other = _row("skew", "other-case", 1.0)
+    problems = check_regress([bad, other], [other],
+                             regress_tol=10.0, ratio_tol=10.0)
+    assert any("absolute floor" in p for p in problems)
+
+
+def test_floor_passes_and_ratio_tol_still_gates():
+    ok = _row("skew", "bvh-wave@n=4096", 1.0, "speedup_vs_stack=5.00")
+    base = _row("skew", "bvh-wave@n=4096", 1.0, "speedup_vs_stack=20.00")
+    # 5.0 clears the floor but collapses 4x vs committed 20 → ratio gate
+    problems = check_regress([ok], [base], regress_tol=10.0, ratio_tol=1.5)
+    assert not any("absolute floor" in p for p in problems)
+    assert any("speedup_vs_stack=5.00 vs committed" in p for p in problems)
+    # within ratio tolerance → clean
+    assert check_regress([ok], [ok], regress_tol=10.0, ratio_tol=1.5) == []
+
+
+def test_empty_intersection_is_not_a_green_check():
+    fresh = [_row("a", "x", 1.0)]
+    committed = [_row("b", "y", 1.0)]
+    problems = check_regress(fresh, committed,
+                             regress_tol=10.0, ratio_tol=1.5)
+    assert any("compared nothing" in p for p in problems)

@@ -90,7 +90,9 @@ def test_frontier_capability_gating():
     eng = nb.make_engine(pts, 0.08, engine="grid")
     assert eng.sweep_frontier is not None
     assert eng.sweep_counts is not None
-    bvh = nb.make_engine(pts, 0.08, engine="bvh")
+    # the wavefront BVH advertises sweep_frontier since DESIGN.md §13.2;
+    # its terminate=False ablation is the engine without the capability
+    bvh = nb.make_engine(pts, 0.08, engine="bvh", terminate=False)
     assert bvh.sweep_frontier is None
     f = dbscan(pts, 0.08, 5, eng=bvh, hook_loop="frontier")
     d = dbscan(pts, 0.08, 5, eng=bvh, hook_loop="device")

@@ -124,31 +124,52 @@ def test_cross_sweep_shapes(T, block_q, nc_blocks, slab_blocks):
         np.testing.assert_allclose(got_d2, exp_d2, rtol=1e-6)
 
 
-@pytest.mark.parametrize("f", [1, 5, 512, 700, 1025])
-def test_bvh_sweep_shapes(f):
-    # wavefront expand step: interpret-mode kernel vs oracle, exact on all
-    # three outputs (hit / minroot / push) across ragged frontier sizes
+@pytest.mark.parametrize("dims", [3, 6])
+@pytest.mark.parametrize("e", [1, 5, 129, 256, 300])
+def test_bvh_batch_sweep_shapes(e, dims):
+    # batched wavefront expand step: interpret-mode kernel vs oracle, exact
+    # on all three outputs (hit / minroot / push) across ragged frontier
+    # sizes, both prune modes and both prune dtypes
     rng = np.random.default_rng(6)
-    q = rng.uniform(-1, 1, (f, 3)).astype(np.float32)
-    a = rng.uniform(-1, 1, (f, 3)).astype(np.float32)
-    b = a + rng.uniform(0, 0.5, (f, 3)).astype(np.float32)
-    leaf = rng.uniform(size=f) < 0.5
-    lo = np.where(leaf[:, None], a, np.minimum(a, b))
-    hi = np.where(leaf[:, None], a, np.maximum(a, b))
-    valid = rng.uniform(size=f) < 0.8
-    croot = rng.integers(0, 9999, f).astype(np.int32)
-    args = [jnp.asarray(x) for x in (q, lo, hi, croot, leaf, valid)]
-    eps, eps2 = 0.25, 0.25 ** 2
-    k = ops.bvh_sweep(*args, eps, eps2, backend="interpret")
-    r = ops.bvh_sweep(*args, eps, eps2, backend="ref")
-    for kk, rr in zip(k, r):
-        np.testing.assert_array_equal(np.asarray(kk), np.asarray(rr))
-    # cross-check against direct numpy
-    inside = ((q >= lo - eps) & (q <= hi + eps)).all(axis=1)
-    d2 = ((q - lo) ** 2).sum(axis=1)
-    np.testing.assert_array_equal(np.asarray(r[0]),
-                                  (valid & leaf & (d2 <= eps2)).astype(np.int32))
-    np.testing.assert_array_equal(np.asarray(r[2]), valid & ~leaf & inside)
+    B = 8
+    q = rng.uniform(-1, 1, (e, B, dims)).astype(np.float32)
+    a = rng.uniform(-1, 1, (e, dims)).astype(np.float32)
+    b = a + rng.uniform(0, 0.5, (e, dims)).astype(np.float32)
+    leaf = (rng.uniform(size=e) < 0.5).astype(np.int32)
+    eps = 0.25
+    dlo = (np.minimum(a, b) - eps).astype(np.float32)
+    dhi = (np.maximum(a, b) + eps).astype(np.float32)
+    pt = a
+    croot = rng.integers(0, 9999, e).astype(np.int32)
+    nmin = rng.integers(0, 9999, e).astype(np.int32)
+    bound = rng.integers(0, 9999, (e, B)).astype(np.int32)
+    args = [jnp.asarray(x)
+            for x in (q, dlo, dhi, pt, croot, nmin, leaf, bound)]
+    eps2 = eps * eps
+    for payload in (False, True):
+        for bf16 in (False, True):
+            kw = dict(prune_payload=payload, bf16_prune=bf16)
+            k = ops.bvh_batch_sweep(*args, eps2, backend="interpret", **kw)
+            r = ops.bvh_batch_sweep(*args, eps2, backend="ref", **kw)
+            for kk, rr in zip(k, r):
+                np.testing.assert_array_equal(np.asarray(kk), np.asarray(rr))
+            # cross-check against direct numpy
+            qp = q.astype(np.float32)
+            if bf16:
+                qp = jnp.asarray(q).astype(jnp.bfloat16).astype(jnp.float32)
+                qp = np.asarray(qp)
+            inside = ((qp >= dlo[:, None]) & (qp <= dhi[:, None])).all(-1)
+            d2 = ((q - pt[:, None]) ** 2).sum(-1)
+            hit = (leaf[:, None] != 0) & (d2 <= eps2)
+            np.testing.assert_array_equal(np.asarray(r[0]),
+                                          hit.astype(np.int32))
+            INT_MAX = np.iinfo(np.int32).max
+            np.testing.assert_array_equal(
+                np.asarray(r[1]), np.where(hit, croot[:, None], INT_MAX))
+            useful = inside & (nmin[:, None] < bound) if payload else inside
+            push = (leaf == 0) & useful.any(-1)
+            np.testing.assert_array_equal(np.asarray(r[2]),
+                                          push.astype(np.int32))
 
 
 @pytest.mark.parametrize("dims", [2, 3])

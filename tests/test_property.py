@@ -95,6 +95,35 @@ def test_minpts_monotone_core(seed):
     assert (np.asarray(lo.core) | ~np.asarray(hi.core)).all()
 
 
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.0, 1.0))
+def test_bvh_termination_never_drops_a_neighbor(seed, core_frac):
+    # ISSUE 7 invariant: the payload-bounded early termination of the
+    # wavefront BVH returns exactly min(exact minroot, bound) — for every
+    # query, every core neighbor the non-terminated traversal finds below
+    # the bound is also found by the terminated one, for arbitrary payload
+    # density and arbitrary bounds
+    from repro.core import bvh as bvh_mod
+    n = 160
+    pts = jnp.asarray(_pts(seed, n=n), jnp.float32)
+    bvh = bvh_mod.build_bvh(pts, dims=2)
+    rng = np.random.default_rng(seed)
+    INT_MAX = np.iinfo(np.int32).max
+    croot = jnp.asarray(
+        np.where(rng.uniform(size=n) < core_frac,
+                 rng.integers(0, n, n), INT_MAX).astype(np.int32))
+    bound = jnp.asarray(rng.integers(0, n + 1, n).astype(np.int32))
+    kw = dict(eps=0.08, eps2=0.08 * 0.08, capacity=1 << 13)
+    _, m_exact, ovf, _ = bvh_mod.wavefront_sweep(
+        bvh, bvh.pts_sorted, croot, **kw)
+    assert not bool(ovf)
+    _, m_term, _, _ = bvh_mod.wavefront_sweep(
+        bvh, bvh.pts_sorted, croot, bound=bound, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(m_term),
+        np.minimum(np.asarray(m_exact), np.asarray(bound)))
+
+
 @settings(max_examples=4, deadline=None)
 @given(st.integers(0, 10_000))
 def test_counts_symmetry(seed):
