@@ -424,6 +424,7 @@ def bench_serve(full: bool = False):
     r.row(f"ingest_chunk@n={n}", dt,
           f"pts_per_s={len(chunk) / dt:.0f},n_delta={sess.n_delta}",
           engine="grid")
+    mem_rate = len(chunk) / dt  # in-memory acked rate: durability baseline
 
     # --- resilience envelope (DESIGN.md §12): serving under an injected
     # compaction stall. The breaker trips on the first stalled rebuild;
@@ -478,6 +479,61 @@ def bench_serve(full: bool = False):
         assert shed == 48 and len(served) == 16
     finally:
         faults.clear()
+
+    # --- durability (DESIGN.md §14): the price of an fsync'd ack, and the
+    # recovery replay rate. Same prewarmed delta buckets as the ingest row,
+    # so both rows time steady-state work, not compiles. The fsync cost is
+    # storage-hardware-dependent, so the derived keys are informational
+    # (deliberately NOT speedup*-named — the ratio gate must not flake on
+    # a runner's disk).
+    import os
+    import shutil
+    import tempfile
+
+    from repro.serve.wal import WriteAheadLog
+
+    wal_root = tempfile.mkdtemp(prefix="bench_wal_")
+    try:
+        rates = {}
+        t_fsync = 0.0
+        for mode in ("none", "fsync"):
+            wd = os.path.join(wal_root, mode, "wal")
+            cd = os.path.join(wal_root, mode, "snap")
+            wsess = serve.ServeSession(
+                snap, max_delta_frac=np.inf, scheduler=sched,
+                wal=WriteAheadLog(wd, durability=mode), ckpt_dir=cd)
+            wsess.ingest(chunk, request_id="w0")  # bucket + first frame
+            t0 = time.perf_counter()
+            wsess.ingest(chunk, request_id="w1")
+            dt = time.perf_counter() - t0
+            rates[mode] = len(chunk) / dt
+            if mode == "fsync":
+                t_fsync = dt
+            wsess.wal.close()
+        r.row(f"durability_overhead@n={n}", t_fsync,
+              f"fsync_pts_per_s={rates['fsync']:.0f},"
+              f"none_pts_per_s={rates['none']:.0f},"
+              f"mem_pts_per_s={mem_rate:.0f},"
+              f"fsync_cost_x={rates['none'] / rates['fsync']:.2f}",
+              engine="grid")
+
+        # recovery: replay the fsync log's 2-chunk suffix onto its step-0
+        # baseline — load + CRC walk + idempotent re-ingest, end to end
+        t0 = time.perf_counter()
+        rsess = serve.ServeSession.recover(
+            os.path.join(wal_root, "fsync", "snap"),
+            os.path.join(wal_root, "fsync", "wal"),
+            max_delta_frac=np.inf, scheduler=sched)
+        dt = time.perf_counter() - t0
+        rep = rsess.last_recovery
+        assert rep.replayed_points == 2 * len(chunk)
+        r.row(f"recovery_replay@n={n}", dt,
+              f"replayed_pts_per_s={rep.replayed_points / dt:.0f},"
+              f"chunks={rep.replayed_chunks},"
+              f"baseline_step={rep.baseline_step}", engine="grid")
+        rsess.wal.close()
+    finally:
+        shutil.rmtree(wal_root, ignore_errors=True)
     return r.rows
 
 

@@ -32,7 +32,14 @@ def _flatten(tree) -> Tuple[list, Any]:
 
 
 def save(ckpt_dir: str, step: int, tree, *, meta: Optional[dict] = None,
-         keep: int = 3) -> str:
+         keep: int = 3, pin=()) -> str:
+    """Atomically publish ``tree`` as ``step``, then keep-K GC.
+
+    ``pin`` is a collection of step numbers the GC must never delete even
+    when they fall outside the newest ``keep`` — the serving tier passes
+    the steps its live WAL watermarks reference, so a recovery baseline
+    is never orphaned by a later publish (DESIGN.md §14.3).
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, treedef = _flatten(tree)
     name = f"step_{step:010d}"
@@ -53,14 +60,20 @@ def save(ckpt_dir: str, step: int, tree, *, meta: Optional[dict] = None,
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
-    _gc(ckpt_dir, keep)
+    _gc(ckpt_dir, keep, pin=pin)
     return final
 
 
-def _gc(ckpt_dir: str, keep: int):
+def _gc(ckpt_dir: str, keep: int, *, pin=()):
+    """Delete all but the newest ``keep`` steps, skipping ``pin``ned ones
+    (steps a live WAL watermark still references — deleting one would
+    orphan the change log's recovery baseline)."""
+    pinned = {int(s) for s in pin}
     steps = sorted(d for d in os.listdir(ckpt_dir)
                    if d.startswith("step_") and ".tmp" not in d)
     for d in steps[:-keep]:
+        if int(d.split("_")[1]) in pinned:
+            continue
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 

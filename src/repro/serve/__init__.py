@@ -14,22 +14,34 @@ before quantization, a :class:`CircuitBreaker` around compaction, a
 bounded :class:`AdmissionQueue` shedding load explicitly, idempotent
 ingest via request ids, and a deterministic fault-injection harness that
 drives every degradation path in tests and benchmarks.
+
+The durability subsystem (``wal.py``; DESIGN.md §14) makes acknowledged
+ingests survive process death: a segmented, CRC-framed
+:class:`WriteAheadLog` is written *before* a chunk is applied
+(log → apply → ack), compaction publishes stamp a watermark coordinating
+the log with the checkpoint layer's keep-K GC, and
+:meth:`ServeSession.recover` replays the log suffix past the newest
+intact snapshot — labels after recovery are bit-identical to batch
+``dbscan()`` on the snapshot corpus plus every acked delta.
 """
 from .assign import AssignResult, assign  # noqa: F401
-from .ingest import IngestResult, ServeSession  # noqa: F401
+from .ingest import (IngestResult, RecoveryReport,  # noqa: F401
+                     ServeSession)
 from .resilience import (AdmissionError, AdmissionQueue,  # noqa: F401
                          CapacityError, CircuitBreaker, CompactionError,
                          ServeError, SnapshotFormatError, ValidationError,
                          validate_points)
 from .scheduler import BucketScheduler  # noqa: F401
 from .snapshot import (ClusterSnapshot, build_snapshot,  # noqa: F401
-                       load_snapshot, save_snapshot)
+                       load_snapshot, published_wal_offsets, save_snapshot)
+from .wal import WalRecord, WriteAheadLog  # noqa: F401
 from . import faults  # noqa: F401
 
 __all__ = [
-    "AssignResult", "assign", "IngestResult", "ServeSession",
-    "BucketScheduler", "ClusterSnapshot", "build_snapshot", "load_snapshot",
-    "save_snapshot", "ServeError", "ValidationError", "AdmissionError",
-    "CapacityError", "CompactionError", "SnapshotFormatError",
-    "CircuitBreaker", "AdmissionQueue", "validate_points", "faults",
+    "AssignResult", "assign", "IngestResult", "RecoveryReport",
+    "ServeSession", "BucketScheduler", "ClusterSnapshot", "build_snapshot",
+    "load_snapshot", "published_wal_offsets", "save_snapshot", "ServeError",
+    "ValidationError", "AdmissionError", "CapacityError", "CompactionError",
+    "SnapshotFormatError", "CircuitBreaker", "AdmissionQueue",
+    "validate_points", "WalRecord", "WriteAheadLog", "faults",
 ]

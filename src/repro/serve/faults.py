@@ -25,6 +25,24 @@ Sites instrumented in this codebase (``inject`` validates the name):
   * ``serve.ingest.label``    — inside online delta labeling (after the
     delta append): an ``error`` models a mid-ingest crash for
     idempotency/replay tests.
+  * ``serve.wal.append``      — top of the WAL append path, before any
+    byte is written: death here loses the (unacked) chunk entirely.
+  * ``serve.wal.fsync``       — inside the ``durability="fsync"`` sync,
+    after the user-space flush but before ``os.fsync`` returns: the
+    frame is on disk, the ack never happened — recovery must apply the
+    chunk in full (logged-but-unacked is never *partially* applied).
+  * ``serve.wal.rotate``      — between closing a full segment and
+    creating its successor: both sides end on frame boundaries.
+  * ``serve.compact.watermark`` — after a compacted snapshot is
+    atomically published but before its WATERMARK record lands in the
+    WAL: recovery must use the offset embedded in the snapshot's own
+    meta, never a WAL record that may not exist.
+
+Process death is simulated in-process by arming a site with
+:class:`Kill`: it derives from ``BaseException`` and the serving code
+re-raises it *without* running rollback/abort handlers — the in-memory
+session is then abandoned exactly as a SIGKILL would leave it, and only
+the on-disk state (WAL + checkpoints) carries into recovery.
 
 File-level faults don't need a site: :func:`corrupt_checkpoint` damages a
 published checkpoint step on disk (truncated arrays, garbage metadata, or
@@ -46,7 +64,19 @@ SITES = frozenset({
     "serve.assign.overflow",
     "serve.ingest.overflow",
     "serve.ingest.label",
+    "serve.wal.append",
+    "serve.wal.fsync",
+    "serve.wal.rotate",
+    "serve.compact.watermark",
 })
+
+
+class Kill(BaseException):
+    """Simulated process death (kill-at-every-site matrix). Derives from
+    ``BaseException`` so ``except Exception`` recovery paths never absorb
+    it, and the serving code's explicit ``except Kill: raise`` clauses
+    skip rollback/abort — in-memory state is abandoned mid-flight, as a
+    real SIGKILL would leave it."""
 
 
 @dataclasses.dataclass

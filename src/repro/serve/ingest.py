@@ -57,6 +57,7 @@ import numpy as np
 from ..core import neighbors as nb
 from ..core.dbscan import _hook_step
 from ..core.union_find import pointer_jump
+from ..distributed import checkpoint as ckpt
 from ..kernels import ops
 from . import faults
 from .assign import AssignResult, assign
@@ -64,7 +65,9 @@ from .resilience import (AdmissionQueue, CapacityError, CircuitBreaker,
                          CompactionError, AdmissionError, ServeError,
                          ValidationError, next_slab, validate_points, CLOSED)
 from .scheduler import BIG, BucketScheduler
-from .snapshot import ClusterSnapshot, build_snapshot, save_snapshot
+from .snapshot import (ClusterSnapshot, build_snapshot, load_snapshot,
+                       published_wal_offsets, save_snapshot)
+from .wal import WriteAheadLog
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -76,6 +79,18 @@ class IngestResult(NamedTuple):
     deduped: bool = False    # replayed request_id: recorded result, no-op
     degraded: bool = False   # a due compaction was deferred/failed (the
     #                          breaker is holding it); staleness grows
+
+
+class RecoveryReport(NamedTuple):
+    """What :meth:`ServeSession.recover` did (DESIGN.md §14.4)."""
+    baseline_step: int       # checkpoint step the recovery loaded
+    baseline_offset: int     # that snapshot's WAL watermark (replay start)
+    replayed_chunks: int     # ingest records applied past the watermark
+    replayed_points: int
+    skipped_aborted: int     # ABORT-neutralized records (in-process fails)
+    skipped_duplicates: int  # byte-duplicated frames (same seq) skipped
+    truncated_bytes: int     # torn tail dropped by the WAL open scan
+    compactions: int         # compactions the replay itself triggered
 
 
 @functools.lru_cache(maxsize=32)
@@ -172,6 +187,16 @@ class ServeSession:
       directly (age-based shedding happens at pump time).
     * ``dedup_window`` — how many recent ``request_id`` results are
       retained to absorb at-least-once replays (0 disables).
+    * ``wal`` — a :class:`~repro.serve.wal.WriteAheadLog` makes ingest
+      *durable*: every chunk is logged (and synced per the log's
+      ``durability``) **before** it is applied, so an acknowledged
+      ingest survives process death — :meth:`recover` replays the log
+      suffix past the newest intact snapshot's watermark. Requires
+      ``ckpt_dir`` (the log replays *onto* a published baseline); if the
+      checkpoint dir is empty, the construction publishes the session's
+      starting snapshot as step 0 so recovery is possible from the very
+      first ingest. ``keep`` bounds the retained snapshot versions
+      (watermark-pinned steps are never GC'd — DESIGN.md §14.3).
     """
     snapshot: ClusterSnapshot
     max_delta_frac: float = 0.25
@@ -183,6 +208,8 @@ class ServeSession:
     breaker: CircuitBreaker | None = None
     admission: AdmissionQueue | None = None
     dedup_window: int = 1024
+    wal: WriteAheadLog | None = None
+    keep: int = 3
 
     def __post_init__(self):
         if self.scheduler is None:
@@ -203,6 +230,28 @@ class ServeSession:
         self._dedup: OrderedDict = OrderedDict()  # request_id -> (digest,
         #                                           IngestResult)
         self._pending: list = []  # burst mode: (ticket, queries) FIFO
+        self._replaying = False   # recover(): records come FROM the log
+        self._wal_applied = 0     # global log offset: every record below
+        #                           it is reflected in (snapshot + delta)
+        self.last_recovery: RecoveryReport | None = None
+        if self.wal is not None:
+            if self.ckpt_dir is None:
+                raise ValueError(
+                    "a WAL-durable session requires ckpt_dir: recovery "
+                    "replays the log on top of a *published* snapshot "
+                    "baseline, so compactions must be able to publish")
+            self._wal_applied = self.wal.position
+            last = ckpt.latest_step(self.ckpt_dir)
+            if last is None:
+                # publish the starting corpus as the recovery baseline —
+                # without it the first crash would have a log but nothing
+                # to replay it onto
+                save_snapshot(self.snapshot, self.ckpt_dir, step=0,
+                              keep=self.keep, wal_offset=self._wal_applied)
+                self.wal.append_watermark(0, self._wal_applied)
+                self._wal_applied = self.wal.position
+            else:
+                self._step = last
 
     # --- health ------------------------------------------------------------
 
@@ -290,8 +339,8 @@ class ServeSession:
         return (self.n_delta >= self.delta_capacity
                 or self.n_delta >= self.max_delta_frac * self.snapshot.n)
 
-    def ingest(self, chunk, *,
-               request_id: Optional[str] = None) -> IngestResult:
+    def ingest(self, chunk, *, request_id: Optional[str] = None,
+               _wal_end: Optional[int] = None) -> IngestResult:
         """Append ``chunk`` (m, 3) and label it online (module docstring).
 
         Returns the chunk's labels; earlier delta points may silently
@@ -302,9 +351,23 @@ class ServeSession:
         an id inside the dedup window returns the recorded result without
         touching the delta (``deduped=True``); the same id with a
         *different* payload raises ``ValidationError``.
+
+        With a ``wal`` attached the contract is **log → apply → ack**
+        (DESIGN.md §14.1): the chunk's frame is appended (and synced per
+        the log's ``durability``) before any state changes, so a result
+        you receive is durable. A failed *apply* (label program raised)
+        rolls the delta back and neutralizes the frame with an ABORT
+        record; a *crash* mid-apply leaves the frame live and recovery
+        applies it in full. ``_wal_end`` is the replay path's internal
+        cursor — the record is already on disk, so replay must not
+        re-append it (that is what makes replay a byte-level no-op).
         """
         chunk = validate_points(chunk, name="chunk")
-        if request_id is not None and self.dedup_window > 0:
+        if request_id is not None and self.dedup_window > 0 \
+                and not self._replaying:
+            # replay skips the *check* (a WAL record exists only for
+            # chunks that passed it originally) but still repopulates the
+            # window below, so post-recovery client retries stay no-ops
             hit = self._dedup.get(request_id)
             if hit is not None:
                 digest, result = hit
@@ -327,9 +390,17 @@ class ServeSession:
                     "retry after the breaker's next probe window",
                     retry_after=max(self.breaker.retry_after(), 0.001),
                     n_delta=self.n_delta)
+        wal_rec = None
+        if self.wal is not None and not self._replaying:
+            # LOG: durable before applied — only then may the ack happen
+            wal_rec = self.wal.append_ingest(chunk, request_id=request_id)
         d0 = self.n_delta
         self._delta = np.concatenate([self._delta, chunk])
         d1 = self.n_delta
+        if wal_rec is not None:
+            self._wal_applied = wal_rec.end
+        elif _wal_end is not None:
+            self._wal_applied = _wal_end
         compacted = False
         try:
             if self._compaction_due() and self._try_compact():
@@ -344,11 +415,17 @@ class ServeSession:
                 labels = self._label_delta()[d0:d1]
                 result = IngestResult(labels=labels, compacted=False,
                                       n_delta=d1, degraded=self.degraded)
+        except faults.Kill:
+            raise  # simulated process death: no in-process cleanup runs —
+            #        the logged-but-unacked frame replays in full
         except BaseException:
             if not compacted:
                 # crash-retry contract: a failed ingest leaves no trace, so
-                # the client's replay is a fresh attempt, not a double
+                # the client's replay is a fresh attempt, not a double —
+                # the WAL frame is neutralized rather than rewritten
                 self._delta = self._delta[:d0]
+                if wal_rec is not None:
+                    self._wal_applied = self.wal.append_abort(wal_rec.seq).end
             raise
         if request_id is not None and self.dedup_window > 0:
             self._dedup[request_id] = (_digest(chunk), result)
@@ -414,12 +491,26 @@ class ServeSession:
         step, and on-disk publication is the checkpoint layer's atomic
         rename, so a crashed compaction never leaves a half-visible
         corpus.
+
+        With a ``wal`` attached, a successful publish stamps the change
+        log's watermark (DESIGN.md §14.3): the new snapshot's meta embeds
+        the applied log offset it folds (crash-consistent — it rides the
+        atomic rename), a WATERMARK record lands in the WAL for GC
+        bookkeeping, keep-K checkpoint GC pins every step a live
+        watermark still references, and WAL segments wholly below the
+        oldest of the newest keep-K snapshots' offsets are unlinked.
+        Death between publish and watermark-append
+        (``serve.compact.watermark`` site) is safe: recovery reads the
+        offset from the snapshot meta.
         """
         if _gated and not force and not self.breaker.allow():
             raise CompactionError(
                 "compaction circuit breaker is open "
                 f"(state={self.breaker.state}); force=True to probe now",
                 retry_after=self.breaker.retry_after())
+        # captured before the rebuild: every logged record reflected in
+        # (snapshot + delta) right now is what the new snapshot will hold
+        wm_offset = self._wal_applied if self.wal is not None else None
         try:
             faults.fire("serve.compact")  # chaos: stall (delay) / failure
             pts = np.concatenate([np.asarray(self.snapshot.points),
@@ -442,5 +533,115 @@ class ServeSession:
         self.breaker.record_success()
         self._compaction_deferred = False
         if self.ckpt_dir is not None:
-            save_snapshot(self.snapshot, self.ckpt_dir, step=self._step)
+            pin = ({s for s, _ in self.wal.live_watermarks()}
+                   if self.wal is not None else ())
+            save_snapshot(self.snapshot, self.ckpt_dir, step=self._step,
+                          keep=self.keep, wal_offset=wm_offset, pin=pin)
+        if self.wal is not None:
+            faults.fire("serve.compact.watermark")  # chaos: die between
+            #   the atomic publish and the WAL's watermark record
+            self._wal_applied = self.wal.append_watermark(
+                self._step, wm_offset).end
+            self._wal_gc()
         return self.snapshot
+
+    # --- durability / recovery ----------------------------------------------
+
+    def _wal_gc(self) -> None:
+        """Unlink WAL segments below the oldest watermark of the *newest*
+        ``keep`` snapshots on disk — the steps keep-K itself retains, so
+        every keep-K baseline always has its whole replay suffix in the
+        log. Older watermark-pinned stragglers deliberately do NOT enter
+        the bound (that would ratchet: a live watermark pins its step,
+        the pinned step's offset would hold the bound down, which keeps
+        its watermark live forever). Their pins are transient segment-
+        granularity slop — the watermark record unlinks with its segment
+        and the next publish's keep-K GC reclaims the step; a fallback
+        that deep is refused by :meth:`recover`'s coverage check rather
+        than silently replayed short (DESIGN.md §14.3)."""
+        offsets = published_wal_offsets(self.ckpt_dir)
+        if offsets:
+            newest = sorted(offsets)[-max(self.keep, 1):]
+            self.wal.gc(min(offsets[s] for s in newest))
+
+    @classmethod
+    def recover(cls, ckpt_dir: str, wal_dir: str, *,
+                durability: str = "fsync", segment_bytes: int = 4 << 20,
+                **session_kw) -> "ServeSession":
+        """Crash-consistent restart (DESIGN.md §14.4): load the newest
+        *intact* snapshot (the hardened loader walks keep-K versions past
+        damage), open the WAL (which truncates a torn tail), and replay
+        every ingest record past the snapshot's watermark through the
+        ordinary idempotent ingest path.
+
+        The invariant this reconstructs: the recovered state contains the
+        baseline corpus plus every *acknowledged* chunk; a chunk whose
+        frame was logged but whose ack never happened (crash mid-apply)
+        is applied in full; an ABORT-neutralized or byte-duplicated frame
+        is skipped. Nothing is ever partially applied — a frame either
+        fails its CRC (dropped with the tail) or decodes to the whole
+        chunk. Replay writes no new frames, so recovering twice from the
+        same disk state is a byte-level no-op on the log and yields an
+        identical session.
+
+        ``session_kw`` forwards policy knobs (``max_delta_frac``,
+        ``breaker`` …) to the rebuilt session; pass the same values the
+        crashed session used so replay-triggered compactions fire at the
+        same thresholds. The :class:`RecoveryReport` lands on
+        ``session.last_recovery``.
+        """
+        snap, meta = load_snapshot(ckpt_dir, with_meta=True)
+        base_step = int(meta["step"])
+        base_off = int(meta.get("wal_offset", 0))
+        wal = WriteAheadLog(wal_dir, durability=durability,
+                            segment_bytes=segment_bytes)
+        if base_off < wal.oldest_offset:
+            # the loader fell back past every step whose suffix the WAL
+            # still holds: replaying from here would silently drop the
+            # acked records GC'd away — refuse loudly instead
+            raise ServeError(
+                f"cannot recover from snapshot step {base_step}: its "
+                f"replay suffix starts at log offset {base_off} but the "
+                f"WAL is garbage-collected below {wal.oldest_offset}; "
+                "the acked records in between exist only in newer "
+                "snapshots (all damaged or deleted)")
+        sess = cls(snap, wal=wal, ckpt_dir=ckpt_dir, **session_kw)
+        # publishes must never collide with an existing (possibly damaged)
+        # newer step: an idempotent save would silently keep the damaged
+        # one, so number past everything on disk
+        sess._step = max(base_step, ckpt.latest_step(ckpt_dir) or 0)
+        sess._wal_applied = base_off
+        records = list(wal.records(base_off))  # materialize: a replay-
+        #   triggered compaction may GC segments while we iterate
+        aborted = {r.aborted_seq for r in records if r.kind == "abort"}
+        seen: set = set()
+        n_chunks = n_pts = n_dup = n_abort = 0
+        comp0 = sess.n_compactions
+        for r in records:
+            if r.kind != "ingest":
+                continue
+            if r.seq in seen:
+                n_dup += 1  # duplicated tail frame: already applied —
+                continue    # replaying it again is the no-op contract
+            seen.add(r.seq)
+            if r.seq in aborted:
+                n_abort += 1
+                continue
+            sess._replaying = True
+            try:
+                sess.ingest(r.chunk, request_id=r.request_id,
+                            _wal_end=r.end)
+            finally:
+                sess._replaying = False
+            n_chunks += 1
+            n_pts += len(r.chunk)
+        # trailing non-ingest records (aborts, watermarks) are no-ops:
+        # advance the applied cursor over them
+        sess._wal_applied = max(sess._wal_applied, wal.position)
+        sess.last_recovery = RecoveryReport(
+            baseline_step=base_step, baseline_offset=base_off,
+            replayed_chunks=n_chunks, replayed_points=n_pts,
+            skipped_aborted=n_abort, skipped_duplicates=n_dup,
+            truncated_bytes=wal.truncated_bytes,
+            compactions=sess.n_compactions - comp0)
+        return sess

@@ -160,10 +160,19 @@ def _spec_from_meta(d: dict) -> grid_mod.CSRGridSpec:
 
 
 def save_snapshot(snapshot: ClusterSnapshot, ckpt_dir: str, *,
-                  step: int = 0, keep: int = 3) -> str:
+                  step: int = 0, keep: int = 3,
+                  wal_offset: int | None = None, pin=()) -> str:
     """Publish a snapshot atomically (checkpoint machinery: tmp dir +
     rename, keep-K gc). ``step`` versions successive snapshots — ingest
-    compactions bump it, and the newest complete one wins on load."""
+    compactions bump it, and the newest complete one wins on load.
+
+    ``wal_offset`` (durable sessions) embeds the snapshot's own change-log
+    watermark in its meta: every WAL record below it is folded into this
+    corpus, so recovery replays exactly the suffix — the offset rides the
+    atomic rename, making the watermark crash-consistent even when the
+    WAL's own WATERMARK record never lands (DESIGN.md §14.3). ``pin``
+    forwards watermark-referenced steps to the keep-K GC.
+    """
     meta = {
         "kind": "cluster_snapshot",
         "format": SNAPSHOT_FORMAT,
@@ -172,10 +181,32 @@ def save_snapshot(snapshot: ClusterSnapshot, ckpt_dir: str, *,
         "min_pts": snapshot.min_pts,
         "spec": _spec_to_meta(snapshot.spec),
     }
-    return ckpt.save(ckpt_dir, step, snapshot, meta=meta, keep=keep)
+    if wal_offset is not None:
+        meta["wal_offset"] = int(wal_offset)
+    return ckpt.save(ckpt_dir, step, snapshot, meta=meta, keep=keep,
+                     pin=pin)
 
 
-def _load_snapshot_step(ckpt_dir: str, step: int) -> ClusterSnapshot:
+def published_wal_offsets(ckpt_dir: str) -> dict:
+    """``{step: wal_offset}`` of every published snapshot whose meta is
+    readable and carries a watermark. The minimum over the *newest
+    keep-K* of these is the WAL GC bound — the log always covers every
+    keep-K baseline's replay suffix (unreadable metas are skipped: their
+    step can't baseline a recovery anyway)."""
+    out = {}
+    for s in ckpt.available_steps(ckpt_dir):
+        try:
+            path = os.path.join(ckpt_dir, f"step_{s:010d}", "meta.json")
+            with open(path) as f:
+                meta = json.load(f)["meta"]
+        except (OSError, ValueError, KeyError):
+            continue
+        if "wal_offset" in meta:
+            out[s] = int(meta["wal_offset"])
+    return out
+
+
+def _load_snapshot_step(ckpt_dir: str, step: int) -> tuple:
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)["meta"]
@@ -193,12 +224,14 @@ def _load_snapshot_step(ckpt_dir: str, step: int) -> ClusterSnapshot:
         cands=dummy, codes=dummy, croot_sorted=dummy, spec=spec,
         engine=meta["engine"], eps=float(meta["eps"]),
         min_pts=int(meta["min_pts"]))
-    restored, _ = ckpt.restore(ckpt_dir, skeleton, step=step)
-    return jax.tree.map(jnp.asarray, restored)
+    restored, full_meta = ckpt.restore(ckpt_dir, skeleton, step=step)
+    meta = dict(meta)
+    meta["step"] = int(full_meta.get("step", step))
+    return jax.tree.map(jnp.asarray, restored), meta
 
 
-def load_snapshot(ckpt_dir: str, *, step: int | None = None) \
-        -> ClusterSnapshot:
+def load_snapshot(ckpt_dir: str, *, step: int | None = None,
+                  with_meta: bool = False):
     """Load the newest *intact* snapshot (or a specific ``step``).
 
     Incomplete ``*.tmp*`` leftovers from a crash mid-write are never
@@ -213,16 +246,22 @@ def load_snapshot(ckpt_dir: str, *, step: int | None = None) \
     A snapshot written by a *newer format* raises
     :class:`~repro.serve.resilience.SnapshotFormatError` without
     fallback — it is intact, just unsupported.
+
+    With ``with_meta=True`` returns ``(snapshot, meta)`` where ``meta``
+    carries ``step`` and (for durable sessions) ``wal_offset`` — what
+    :meth:`ServeSession.recover` needs to pick its replay suffix.
     """
     if step is not None:
-        return _load_snapshot_step(ckpt_dir, step)
+        snap, meta = _load_snapshot_step(ckpt_dir, step)
+        return (snap, meta) if with_meta else snap
     steps = ckpt.available_steps(ckpt_dir)
     if not steps:
         raise FileNotFoundError(f"no snapshots in {ckpt_dir}")
     errors = []
     for s in reversed(steps):
         try:
-            return _load_snapshot_step(ckpt_dir, s)
+            snap, meta = _load_snapshot_step(ckpt_dir, s)
+            return (snap, meta) if with_meta else snap
         except resilience.SnapshotFormatError:
             raise
         except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
