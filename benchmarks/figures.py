@@ -534,6 +534,62 @@ def bench_serve(full: bool = False):
         rsess.wal.close()
     finally:
         shutil.rmtree(wal_root, ignore_errors=True)
+
+    # --- sharded tier (DESIGN.md §15): the same ragged request stream
+    # scattered over 1/2/4 Morton-range shards and gathered back. The QPS
+    # scaling is real work saved, not parallelism (one device serves all
+    # shards here): ε-dilated routing sends each query only to the 1-2
+    # shards it can touch, and each shard's plan sizes its candidate slab
+    # to LOCAL density, so queries in sparse regions stop paying for the
+    # densest window of the whole corpus. That claim needs a skewed
+    # corpus (skewed2d: one dense clump in a sparse field — the global
+    # plan's slab is clump-width for everyone; sharded, only the clump's
+    # shard keeps it) and batches big enough that per-shard bucket
+    # padding doesn't dominate. Streams are primed exactly (same seed)
+    # before timing, so the zero-recompile gate holds even though slab
+    # regrows are data-dependent.
+    pts_sk = synth.load("skewed2d", n, seed=20)
+    snap_sk = serve.build_snapshot(pts_sk, 0.05, 16)
+    lo, hi = pts_sk.min(0), pts_sk.max(0)
+    n_shard_req = max(n_requests // 3, 20)
+
+    def shard_stream(seed):
+        rs = np.random.default_rng(seed)
+        for _ in range(n_shard_req):
+            nq = int(rs.integers(256, 4096))
+            q = rs.uniform(lo - 0.1, hi + 0.1, (nq, 3)).astype(np.float32)
+            q[:, 2] = 0
+            yield q
+
+    qps = {}
+    for k in (1, 2, 4):
+        sch_k = serve.BucketScheduler()
+        tier = serve.ShardedTier.from_snapshot(snap_sk, n_shards=k,
+                                               scheduler=sch_k)
+        for b in sch_k.buckets_upto(4096):       # trace the bucket ladder,
+            tier.assign(np.zeros((b, 3), np.float32))
+        for q in shard_stream(33):               # then prime the exact stream
+            tier.assign(q)
+        sch_k.reset_stats()
+        n_q = 0
+        t0 = time.perf_counter()
+        for q in shard_stream(33):
+            tier.assign(q)
+            n_q += len(q)
+        dt = time.perf_counter() - t0
+        qps[k] = n_q / dt
+        hist = "|".join(f"{f}:{c}" for f, c in sorted(sch_k.routed.items()))
+        r.row(f"assign_sharded@shards={k}", dt,
+              f"qps={qps[k]:.0f},routed_hist={hist},"
+              f"recompiles={sch_k.recompiles},"
+              f"shard_sizes={'/'.join(str(p.n) for p in tier.parts)}",
+              engine="grid")
+        assert sch_k.recompiles == 0, \
+            f"sharded stream (k={k}) retraced {sch_k.recompiles}x"
+    r.row(f"shard_scaling@n={n}", 0.0,
+          f"speedup_shard2={qps[2] / qps[1]:.2f},"
+          f"speedup_shard4={qps[4] / qps[1]:.2f},"
+          f"qps_1shard={qps[1]:.0f}", engine="grid")
     return r.rows
 
 

@@ -17,6 +17,15 @@ The kill is a real ``SIGKILL`` the process sends itself at a durability
 boundary (frame flushed, ack never delivered), so the recover run
 demonstrates the full contract: every acked chunk survives, the in-flight
 chunk is applied in full or not at all, and parity is exact.
+
+Sharded mode (DESIGN.md §15): the same serve loop scattered over N
+Morton-range shards behind the router —
+
+    python examples/serve_clusters.py --shards 3
+
+streams ingest through per-shard delta buffers, compacts at tier scope,
+and verifies the reassembled shard-local labels are bit-identical to
+batch ``dbscan()`` on everything ingested (exit 1 on mismatch).
 """
 import sys, os, time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -105,6 +114,73 @@ def batch_demo():
           f"{sess.admission.shed}, slab regrows: {sess.scheduler.regrows}")
 
 
+def sharded_demo(args):
+    # --- split a clustered corpus across Morton-range shards ----------------
+    pts = synth.load("taxi2d", args.n_corpus, seed=0)
+    t0 = time.perf_counter()
+    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=args.shards)
+    print(f"sharded tier: n={tier.n} shards={tier.n_shards} "
+          f"sizes={[p.n for p in tier.parts]} "
+          f"built in {time.perf_counter() - t0:.2f}s")
+
+    # --- stream ingest through the router -----------------------------------
+    # each chunk scatters to the shards owning its Morton codes; tier-scope
+    # compaction rebuilds the global clustering and re-cuts the shards
+    chunks = []
+    t0 = time.perf_counter()
+    for chunk in point_stream("taxi2d", args.n_stream, CHUNK, seed=0):
+        res = tier.ingest(chunk)
+        chunks.append(chunk)
+        tag = "compacted" if res.compacted else f"delta={res.n_delta}"
+        print(f"  ingest {len(chunk)} pts ({tag}): "
+              f"{(res.labels >= 0).mean():.0%} clustered")
+    n_in = sum(len(c) for c in chunks)
+    dt = time.perf_counter() - t0
+    print(f"ingested {n_in} pts in {dt:.2f}s ({n_in / dt:.0f} pts/s, "
+          f"{tier.n_compactions} tier compactions)")
+    tier.compact(force=True)
+
+    # --- scatter-gather assign: routed fan-out + zero recompiles ------------
+    def stream(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(40):
+            nq = int(rng.integers(1, 1024))
+            yield (rng.uniform(0, 8, (nq, 3)) * [1, 1, 0]).astype(np.float32)
+
+    for b in tier.scheduler.buckets_upto(1024):       # trace the ladder,
+        tier.assign((np.zeros((b, 3))).astype(np.float32))
+    for q in stream(2):                               # then prime the exact
+        tier.assign(q)                                # stream (slab regrows
+    tier.scheduler.reset_stats()                      # are data-dependent)
+    t0 = time.perf_counter()
+    n_q = 0
+    for q in stream(2):
+        r = tier.assign(q)
+        n_q += len(q)
+    dt = time.perf_counter() - t0
+    hist = dict(sorted(tier.scheduler.routed.items()))
+    print(f"assigned {n_q} queries in {dt:.2f}s — {n_q / dt:.0f} QPS, "
+          f"shards-per-query histogram {hist}, "
+          f"recompiles after warmup: {tier.scheduler.recompiles}")
+
+    # --- parity: shard labels reassemble to the batch answer ----------------
+    every = np.concatenate([pts] + chunks)
+    full = dbscan(every, EPS, MINPTS, engine="grid")
+    lab = np.full(len(every), -1, np.int64)
+    for p in tier.parts:
+        loc = np.asarray(p.snapshot.labels)
+        g = np.full(len(loc), -1, np.int64)
+        if p.label_table.size:
+            m = loc >= 0
+            g[m] = p.label_table.astype(np.int64)[loc[m]]
+        lab[p.orig_index] = g
+    ok = np.array_equal(lab, np.asarray(full.labels))
+    print(f"parity vs batch dbscan on {len(every)} pts across "
+          f"{tier.n_shards} shards: "
+          + ("OK — bit-identical" if ok else "MISMATCH"))
+    sys.exit(0 if ok else 1)
+
+
 def durable_demo(args):
     ckpt_dir = args.ckpt_dir or args.wal_dir.rstrip("/") + "-snap"
 
@@ -184,10 +260,16 @@ if __name__ == "__main__":
                     help="SIGKILL self mid-ingest after N acked chunks")
     ap.add_argument("--durability", default="fsync",
                     choices=["fsync", "flush", "none"])
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="serve through a sharded tier of N Morton-range "
+                         "shards and verify batch parity (exit 1 on "
+                         "mismatch)")
     ap.add_argument("--n-corpus", type=int, default=6_000)
     ap.add_argument("--n-stream", type=int, default=2_048)
     args = ap.parse_args()
-    if args.wal_dir is None:
+    if args.shards is not None:
+        sharded_demo(args)
+    elif args.wal_dir is None:
         batch_demo()  # the original smoke: no flags, no durability
     else:
         durable_demo(args)

@@ -23,6 +23,15 @@ Differences from the self-join kernel, both serving-driven:
 Layout matches ``csr_sweep``: queries row-major ``(T·block_q, 3)``,
 candidates coordinate-planar ``(3, nc)``. Padding: coords +BIG (padded
 queries can never hit finite corpus points), payload INT32_MAX.
+
+Payload-id contract for sharded serving (DESIGN.md §15.3): the kernel
+only ever *min-reduces* the payload plane, so callers may load it with
+any label encoding whose order embeds the global one. The sharded tier
+exploits this by carrying **shard-local dense ids** (the s-th smallest
+global cluster label present in the shard is id s): because that remap
+is monotone, per-shard ``minroot`` mapped back through the shard's label
+table and min-merged across shards is bit-identical to a global
+``minroot`` — no kernel change, just a different payload plane.
 """
 from __future__ import annotations
 

@@ -23,6 +23,14 @@ the log with the checkpoint layer's keep-K GC, and
 :meth:`ServeSession.recover` replays the log suffix past the newest
 intact snapshot — labels after recovery are bit-identical to batch
 ``dbscan()`` on the snapshot corpus plus every acked delta.
+
+The sharded tier (``shard.py``, ``router.py``; DESIGN.md §15) lifts all
+of it from one device to many: :func:`split_snapshot` partitions the
+Morton-sorted corpus into per-device shards with shard-local label
+tables, and :class:`ShardedTier` scatter-gathers ``assign``/``ingest``
+across them — merged answers and tier compactions stay bit-identical to
+the single-snapshot path, with per-shard WALs, checkpoint namespaces,
+and a shared circuit breaker bounding any one shard's blast radius.
 """
 from .assign import AssignResult, assign  # noqa: F401
 from .ingest import (IngestResult, RecoveryReport,  # noqa: F401
@@ -31,7 +39,9 @@ from .resilience import (AdmissionError, AdmissionQueue,  # noqa: F401
                          CapacityError, CircuitBreaker, CompactionError,
                          ServeError, SnapshotFormatError, ValidationError,
                          validate_points)
+from .router import ShardedTier  # noqa: F401
 from .scheduler import BucketScheduler  # noqa: F401
+from .shard import ShardMap, ShardPart, split_snapshot  # noqa: F401
 from .snapshot import (ClusterSnapshot, build_snapshot,  # noqa: F401
                        load_snapshot, published_wal_offsets, save_snapshot)
 from .wal import WalRecord, WriteAheadLog  # noqa: F401
@@ -44,4 +54,5 @@ __all__ = [
     "ValidationError", "AdmissionError", "CapacityError", "CompactionError",
     "SnapshotFormatError", "CircuitBreaker", "AdmissionQueue",
     "validate_points", "WalRecord", "WriteAheadLog", "faults",
+    "ShardedTier", "ShardMap", "ShardPart", "split_snapshot",
 ]

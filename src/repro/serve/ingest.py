@@ -197,6 +197,20 @@ class ServeSession:
       starting snapshot as step 0 so recovery is possible from the very
       first ingest. ``keep`` bounds the retained snapshot versions
       (watermark-pinned steps are never GC'd — DESIGN.md §14.3).
+    * ``session_id`` — names this session in shed/error messages; with
+      several sessions in one process (the sharded tier runs one per
+      shard) an ``AdmissionError`` must say *which* buffer is full.
+    * ``ckpt_namespace`` — scopes this session's checkpoint steps (and
+      their keep-K GC + watermark pins) to a subdirectory of
+      ``ckpt_dir``; the sharded tier publishes shard ``j`` under
+      ``shard-00j`` so shards can never GC each other (DESIGN.md §15).
+    * ``on_compact`` — compaction delegate: when set, a due/overflowing
+      delta calls it instead of compacting locally (it returns True when
+      the owner compacted, False when deferred). The sharded tier owns
+      compaction because cluster labels are a *global* connectivity
+      property — a shard cannot re-cluster alone (DESIGN.md §15.4); the
+      tier folds every shard's delta in canonical order and hands each
+      session its new shard via :meth:`adopt_snapshot`.
     """
     snapshot: ClusterSnapshot
     max_delta_frac: float = 0.25
@@ -210,6 +224,9 @@ class ServeSession:
     dedup_window: int = 1024
     wal: WriteAheadLog | None = None
     keep: int = 3
+    session_id: str | None = None
+    ckpt_namespace: str | None = None
+    on_compact: Optional[callable] = None
 
     def __post_init__(self):
         if self.scheduler is None:
@@ -241,17 +258,23 @@ class ServeSession:
                     "replays the log on top of a *published* snapshot "
                     "baseline, so compactions must be able to publish")
             self._wal_applied = self.wal.position
-            last = ckpt.latest_step(self.ckpt_dir)
+            last = ckpt.latest_step(self.ckpt_dir,
+                                    namespace=self.ckpt_namespace)
             if last is None:
                 # publish the starting corpus as the recovery baseline —
                 # without it the first crash would have a log but nothing
                 # to replay it onto
                 save_snapshot(self.snapshot, self.ckpt_dir, step=0,
-                              keep=self.keep, wal_offset=self._wal_applied)
+                              keep=self.keep, wal_offset=self._wal_applied,
+                              namespace=self.ckpt_namespace)
                 self.wal.append_watermark(0, self._wal_applied)
                 self._wal_applied = self.wal.position
             else:
                 self._step = last
+
+    def _sid(self) -> str:
+        """Human-readable session identity for shed/error messages."""
+        return self.session_id if self.session_id is not None else "default"
 
     # --- health ------------------------------------------------------------
 
@@ -386,10 +409,12 @@ class ServeSession:
             # when the breaker is holding compaction (retry once it probes)
             if not self._try_compact():
                 raise AdmissionError(
-                    "delta buffer full and compaction is circuit-broken; "
-                    "retry after the breaker's next probe window",
+                    f"session {self._sid()!r}: delta buffer full "
+                    f"({self.n_delta}/{self.delta_capacity}) and compaction "
+                    "is circuit-broken; retry after the breaker's next "
+                    "probe window",
                     retry_after=max(self.breaker.retry_after(), 0.001),
-                    n_delta=self.n_delta)
+                    n_delta=self.n_delta, session_id=self.session_id)
         wal_rec = None
         if self.wal is not None and not self._replaying:
             # LOG: durable before applied — only then may the ack happen
@@ -463,7 +488,13 @@ class ServeSession:
 
     def _try_compact(self) -> bool:
         """Breaker-gated compaction for the hot path: False when deferred
-        (breaker open) or failed (failure recorded, old snapshot live)."""
+        (breaker open) or failed (failure recorded, old snapshot live).
+        With an ``on_compact`` delegate the decision belongs to the owner
+        (the sharded tier) — it compacts tier-wide or defers."""
+        if self.on_compact is not None:
+            ok = bool(self.on_compact())
+            self._compaction_deferred = not ok
+            return ok
         if not self.breaker.allow():
             self._compaction_deferred = True
             return False
@@ -503,6 +534,11 @@ class ServeSession:
         (``serve.compact.watermark`` site) is safe: recovery reads the
         offset from the snapshot meta.
         """
+        if self.on_compact is not None:
+            raise ServeError(
+                f"session {self._sid()!r} compacts at tier scope (its "
+                "labels are a slice of a global clustering) — call the "
+                "owning tier's compact() instead")
         if _gated and not force and not self.breaker.allow():
             raise CompactionError(
                 "compaction circuit breaker is open "
@@ -526,24 +562,40 @@ class ServeSession:
                 "last published snapshot remains live",
                 retry_after=self.breaker.retry_after()) from e
         # success: atomic swap, then atomic publish
+        self.breaker.record_success()
+        self._adopt(new_snapshot, wm_offset)
+        return self.snapshot
+
+    def adopt_snapshot(self, new_snapshot: ClusterSnapshot) -> None:
+        """Swap in an externally rebuilt snapshot (the sharded tier's
+        global compaction path, DESIGN.md §15.4): the delta is cleared,
+        the step bumps, and the publish/watermark tail runs exactly as a
+        local compaction's — atomic checkpoint rename under this
+        session's namespace, WAL watermark, keep-K + WAL GC. The caller
+        guarantees ``new_snapshot`` reflects this session's whole delta
+        (plus whatever else the tier folded)."""
+        wm_offset = self._wal_applied if self.wal is not None else None
+        self._adopt(new_snapshot, wm_offset)
+
+    def _adopt(self, new_snapshot: ClusterSnapshot,
+               wm_offset: int | None) -> None:
         self.snapshot = new_snapshot
         self._delta = np.zeros((0, 3), np.float32)
         self.n_compactions += 1
         self._step += 1
-        self.breaker.record_success()
         self._compaction_deferred = False
         if self.ckpt_dir is not None:
             pin = ({s for s, _ in self.wal.live_watermarks()}
                    if self.wal is not None else ())
             save_snapshot(self.snapshot, self.ckpt_dir, step=self._step,
-                          keep=self.keep, wal_offset=wm_offset, pin=pin)
+                          keep=self.keep, wal_offset=wm_offset, pin=pin,
+                          namespace=self.ckpt_namespace)
         if self.wal is not None:
             faults.fire("serve.compact.watermark")  # chaos: die between
             #   the atomic publish and the WAL's watermark record
             self._wal_applied = self.wal.append_watermark(
                 self._step, wm_offset).end
             self._wal_gc()
-        return self.snapshot
 
     # --- durability / recovery ----------------------------------------------
 
@@ -559,7 +611,8 @@ class ServeSession:
         and the next publish's keep-K GC reclaims the step; a fallback
         that deep is refused by :meth:`recover`'s coverage check rather
         than silently replayed short (DESIGN.md §14.3)."""
-        offsets = published_wal_offsets(self.ckpt_dir)
+        offsets = published_wal_offsets(self.ckpt_dir,
+                                        namespace=self.ckpt_namespace)
         if offsets:
             newest = sorted(offsets)[-max(self.keep, 1):]
             self.wal.gc(min(offsets[s] for s in newest))
@@ -590,7 +643,9 @@ class ServeSession:
         same thresholds. The :class:`RecoveryReport` lands on
         ``session.last_recovery``.
         """
-        snap, meta = load_snapshot(ckpt_dir, with_meta=True)
+        namespace = session_kw.get("ckpt_namespace")
+        snap, meta = load_snapshot(ckpt_dir, with_meta=True,
+                                   namespace=namespace)
         base_step = int(meta["step"])
         base_off = int(meta.get("wal_offset", 0))
         wal = WriteAheadLog(wal_dir, durability=durability,
@@ -609,7 +664,9 @@ class ServeSession:
         # publishes must never collide with an existing (possibly damaged)
         # newer step: an idempotent save would silently keep the damaged
         # one, so number past everything on disk
-        sess._step = max(base_step, ckpt.latest_step(ckpt_dir) or 0)
+        sess._step = max(base_step,
+                         ckpt.latest_step(ckpt_dir, namespace=namespace)
+                         or 0)
         sess._wal_applied = base_off
         records = list(wal.records(base_off))  # materialize: a replay-
         #   triggered compaction may GC segments while we iterate

@@ -1,0 +1,504 @@
+"""Scatter-gather serving tier over Morton-range shards (DESIGN.md §15).
+
+:class:`ShardedTier` is the multi-device form of :class:`ServeSession`:
+one :class:`~repro.serve.shard.ShardMap` routes every request to the
+shards it can touch, per-shard ``ClusterSnapshot``s (placed round-robin
+on the host's devices via ``distributed.shard_devices``) answer in
+shard-local label space, and the gather remaps + min-merges back to the
+global answer — bit-identical to the single-snapshot path (§15.3).
+
+**Query path.** ``assign`` computes each query's ε-dilated tier window,
+bisects the window cell codes against the global sorted codes, and
+scatters the batch's sub-sets to the 1–2 shards owning occupied runs
+(`ShardMap.window_shards`). Each shard runs the same bucketed
+``cross_sweep`` program ``assign`` always ran — one shared
+:class:`BucketScheduler` fronts all shards (and their replicas) as the
+load balancer, and because trace keys carry the shard's plan, its
+recompile count stays honest across the tier. The gather is three
+monotone merges: counts **sum**, minroot **min** (after the shard-local
+→ global label-table remap, which is monotone because the table is
+ascending), mind2 **min** (IEEE sqrt is monotone, so min-of-dist equals
+dist-of-min bit-for-bit).
+
+**Ingest path.** Deltas split by Morton ownership (`ShardMap.owner_of`)
+into per-shard ``ServeSession`` buffers — per-shard WAL offsets,
+per-shard checkpoint namespaces, per-shard online labeling. Compaction
+is *triggered* per shard (a full or due buffer) but *executed* at tier
+scope: cluster labels are a global connectivity property (a boundary
+point's core status needs neighbors from both sides), so the tier
+rebuilds from the canonical corpus + the arrival-ordered chunk log —
+exactly the concatenation order the single ``ServeSession`` compacts —
+then re-splits and hands every session its new shard through
+:meth:`ServeSession.adopt_snapshot`. One regrowing/failing rebuild
+trips the *shared* circuit breaker: every shard keeps serving its last
+published snapshot, answers carry ``degraded``/``staleness``, and
+overflowing ingests shed with the owning shard named in the error
+(DESIGN.md §15.4).
+
+**Replication.** ``replicate(shard_id)`` adds read replicas of a hot
+shard; the router round-robins ``assign`` traffic across them. Replicas
+share the shard's plan, so they add zero new traces (and on multi-device
+hosts each replica is ``device_put`` onto its own slot).
+"""
+from __future__ import annotations
+
+import os
+import time
+from collections import Counter, OrderedDict
+from typing import Optional
+
+import jax
+import numpy as np
+
+from .. import distributed as dist
+from . import faults
+from .assign import AssignResult, assign
+from .ingest import IngestResult, ServeSession, _digest
+from .resilience import (AdmissionError, AdmissionQueue, CapacityError,
+                         CircuitBreaker, CompactionError,
+                         ValidationError, validate_points, CLOSED)
+from .scheduler import BucketScheduler
+from .shard import ShardMap, split_snapshot
+from .snapshot import ClusterSnapshot, build_snapshot
+from .wal import WriteAheadLog
+
+INT64_MAX = np.iinfo(np.int64).max
+
+
+class ShardedTier:
+    """Morton-range shards behind a scatter-gather router (module
+    docstring; DESIGN.md §15). Build one with :meth:`build`, or from an
+    existing global snapshot with :meth:`from_snapshot`.
+
+    Router knobs: ``n_shards`` (requested; the effective count can be
+    smaller when code-run snapping collapses cuts), ``block_q`` /
+    ``scheduler`` (shared bucket ladder + telemetry), ``max_delta_frac``
+    / ``delta_capacity`` (per-shard ingest buffer policy),
+    ``ckpt_root``/``wal_root`` (durable mode: per-shard checkpoint
+    namespaces ``shard-00j`` + per-shard WAL directories), ``devices``
+    (placement override for :func:`distributed.shard_devices`).
+    """
+
+    def __init__(self, shard_map: ShardMap, parts: list, *, corpus,
+                 eps: float, min_pts: int, n_shards: int,
+                 engine: str = "grid", backend: Optional[str] = None,
+                 block_q: int = 256,
+                 scheduler: Optional[BucketScheduler] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 admission: Optional[AdmissionQueue] = None,
+                 max_delta_frac: float = 0.25,
+                 delta_capacity: int = 1 << 14,
+                 dedup_window: int = 1024,
+                 ckpt_root: Optional[str] = None,
+                 wal_root: Optional[str] = None,
+                 durability: str = "fsync", keep: int = 3,
+                 devices=None):
+        self.eps = float(eps)
+        self.min_pts = int(min_pts)
+        self.engine = engine
+        self.backend = backend
+        self.block_q = block_q
+        self.n_shards_requested = int(n_shards)
+        self.max_delta_frac = max_delta_frac
+        self.delta_capacity = delta_capacity
+        self.dedup_window = dedup_window
+        self.ckpt_root = ckpt_root
+        self.wal_root = wal_root
+        self.durability = durability
+        self.keep = keep
+        self.scheduler = scheduler or BucketScheduler(min_bucket=block_q)
+        self.breaker = breaker or CircuitBreaker()
+        self.admission = admission or AdmissionQueue()
+        self._devices = dist.shard_devices(
+            max(len(parts), 1), devices)
+        self._multi_device = len(set(self._devices)) > 1
+        # canonical state: the corpus in original order plus the arrival-
+        # ordered log of fully-acked chunks — together they ARE the
+        # single-session concatenation order, which is what makes tier
+        # compaction bit-identical to the single-snapshot path (§15.4)
+        self._corpus = np.asarray(corpus, np.float32)
+        self._chunks: list = []
+        self._dedup: OrderedDict = OrderedDict()
+        self.n_compactions = 0
+        self._compaction_deferred = False
+        self._routing = False  # reentrancy guard: no compaction while a
+        #                        chunk is mid-scatter (§15.4)
+        self._replica_counts: dict = {}
+        self._extra_replicas: dict = {}
+        self._rr: Counter = Counter()
+        self.replica_served: Counter = Counter()
+        self.map = shard_map
+        self.parts: list = []
+        self.sessions: list = []
+        self._adopt(shard_map, list(parts))
+
+    # --- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, points, eps: float, min_pts: int, *, n_shards: int,
+              engine: str = "grid", backend: Optional[str] = None,
+              **knobs) -> "ShardedTier":
+        """Cluster ``points`` globally, split by Morton range, bring up
+        one session per shard."""
+        snap = build_snapshot(points, eps, min_pts, engine=engine,
+                              backend=backend)
+        return cls.from_snapshot(snap, n_shards=n_shards, backend=backend,
+                                 **knobs)
+
+    @classmethod
+    def from_snapshot(cls, snapshot: ClusterSnapshot, *, n_shards: int,
+                      backend: Optional[str] = None,
+                      **knobs) -> "ShardedTier":
+        smap, parts = split_snapshot(snapshot, n_shards)
+        return cls(smap, parts, corpus=np.asarray(snapshot.points),
+                   eps=snapshot.eps, min_pts=snapshot.min_pts,
+                   n_shards=n_shards, engine=snapshot.engine,
+                   backend=backend, **knobs)
+
+    def _place(self, shard_id: int, snapshot: ClusterSnapshot,
+               replica: int = 0) -> ClusterSnapshot:
+        """Pin a shard (or one of its replicas) to its device slot.
+        Single-device hosts skip the copy — placement is then identity
+        and replicas share the shard's buffers."""
+        if not self._multi_device:
+            return snapshot
+        devs = self._devices
+        dev = devs[(shard_id + replica * len(self.parts)) % len(devs)]
+        return jax.device_put(snapshot, dev)
+
+    def _make_session(self, shard_id: int,
+                      snapshot: ClusterSnapshot) -> ServeSession:
+        sid = f"shard-{shard_id:03d}"
+        wal = None
+        if self.wal_root is not None:
+            wal = WriteAheadLog(os.path.join(self.wal_root, sid),
+                                durability=self.durability)
+        return ServeSession(
+            snapshot,
+            # the session never self-decides compaction policy — the tier
+            # owns the due-check and the rebuild (on_compact delegate)
+            max_delta_frac=float("inf"),
+            delta_capacity=self.delta_capacity,
+            scheduler=self.scheduler, backend=self.backend,
+            block_q=self.block_q, ckpt_dir=self.ckpt_root,
+            breaker=self.breaker, admission=AdmissionQueue(),
+            dedup_window=self.dedup_window, wal=wal, keep=self.keep,
+            session_id=sid, ckpt_namespace=sid,
+            on_compact=lambda _j=shard_id: self._compact_for(_j))
+
+    def _adopt(self, smap: ShardMap, parts: list) -> None:
+        """Swap in a re-split tier (initial bring-up and every
+        compaction): existing sessions adopt their new shard in place
+        (keeping WAL/checkpoint/dedup continuity), extra sessions are
+        retired, missing ones created, replicas re-materialized at their
+        configured counts."""
+        self.map = smap
+        for sess in self.sessions[len(parts):]:
+            if sess.wal is not None:
+                sess.wal.close()
+        new_sessions = []
+        for j, part in enumerate(parts):
+            snap = self._place(j, part.snapshot)
+            if j < len(self.sessions):
+                sess = self.sessions[j]
+                sess.adopt_snapshot(snap)
+            else:
+                sess = self._make_session(j, snap)
+            new_sessions.append(sess)
+        self.sessions = new_sessions
+        self.parts = list(parts)
+        self._extra_replicas = {
+            j: [self._place(j, parts[j].snapshot, replica=r + 1)
+                for r in range(self._replica_counts.get(j, 0))]
+            for j in range(len(parts))}
+
+    # --- health -------------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        """Effective shard count (≤ requested — cut snapping)."""
+        return len(self.parts)
+
+    @property
+    def n(self) -> int:
+        return len(self._corpus) + sum(len(c) for c in self._chunks)
+
+    @property
+    def n_delta(self) -> int:
+        return sum(s.n_delta for s in self.sessions)
+
+    @property
+    def degraded(self) -> bool:
+        return (self._compaction_deferred
+                or self.breaker.state != CLOSED
+                or any(s._compaction_deferred for s in self.sessions))
+
+    # --- replication / load balancing ---------------------------------------
+
+    def replicate(self, shard_id: int, copies: int = 1) -> int:
+        """Add ``copies`` read replicas of a hot shard; returns the new
+        replica count (serving copies = count + 1). Replicas follow
+        compactions automatically."""
+        if not 0 <= shard_id < len(self.parts):
+            raise ValueError(f"no shard {shard_id} (have {len(self.parts)})")
+        cur = self._replica_counts.get(shard_id, 0)
+        self._replica_counts[shard_id] = cur + int(copies)
+        reps = self._extra_replicas.setdefault(shard_id, [])
+        for r in range(cur, cur + int(copies)):
+            reps.append(self._place(shard_id,
+                                    self.parts[shard_id].snapshot,
+                                    replica=r + 1))
+        return self._replica_counts[shard_id]
+
+    def _pick_replica(self, shard_id: int) -> ClusterSnapshot:
+        reps = ([self.sessions[shard_id].snapshot]
+                + self._extra_replicas.get(shard_id, []))
+        i = self._rr[shard_id] % len(reps)
+        self._rr[shard_id] += 1
+        self.replica_served[(shard_id, i)] += 1
+        return reps[i]
+
+    # --- queries ------------------------------------------------------------
+
+    def warmup(self, max_nq: int = 1024) -> None:
+        """Trace every shard's (and replica's) bucket ladder so a
+        variable request stream recompiles nothing. Queries are corpus
+        points of the shard itself — live windows, realistic slabs."""
+        for j, part in enumerate(self.parts):
+            p0 = np.asarray(part.snapshot.points)[:1]
+            snaps = ([self.sessions[j].snapshot]
+                     + self._extra_replicas.get(j, []))
+            for b in self.scheduler.buckets_upto(max_nq):
+                q = np.tile(p0, (b, 1))
+                for snap in snaps:
+                    assign(snap, q, scheduler=self.scheduler,
+                           block_q=self.block_q, backend=self.backend)
+
+    def assign(self, queries) -> AssignResult:
+        """Scatter-gather DBSCAN-predict (module docstring). The merged
+        answer is bit-identical to single-snapshot ``assign`` on the
+        unsplit corpus — the §15.3 invariant the parity suite gates."""
+        q_np = validate_points(queries, name="queries")
+        ticket = self.admission.admit(len(q_np))
+        t0 = time.perf_counter()
+        try:
+            return self._assign_admitted(q_np)
+        finally:
+            self.admission.finish(ticket, time.perf_counter() - t0)
+
+    def _assign_admitted(self, q_np: np.ndarray) -> AssignResult:
+        t0 = time.perf_counter()
+        mask = self.map.window_shards(q_np)
+        self.scheduler.note_route(mask.sum(axis=1))
+        nq = len(q_np)
+        counts = np.zeros(nq, np.int32)
+        merged = np.full(nq, INT64_MAX, np.int64)
+        dist_m = np.full(nq, np.inf, np.float32)
+        bucket = 0
+        staleness = 0
+        for j in range(len(self.parts)):
+            idx = np.nonzero(mask[:, j])[0]
+            if idx.size == 0:
+                continue
+            snap_j = self._pick_replica(j)
+            try:
+                r = assign(snap_j, q_np[idx], scheduler=self.scheduler,
+                           block_q=self.block_q, backend=self.backend)
+            except CapacityError:
+                self.breaker.record_failure()
+                raise
+            table = self.parts[j].label_table.astype(np.int64)
+            if table.size:
+                glab = np.where(r.labels >= 0,
+                                table[np.clip(r.labels, 0, None)],
+                                INT64_MAX)
+            else:
+                glab = np.full(idx.size, INT64_MAX, np.int64)
+            merged[idx] = np.minimum(merged[idx], glab)
+            counts[idx] += r.counts
+            dist_m[idx] = np.minimum(dist_m[idx], r.dist)
+            bucket += r.bucket
+            staleness += self.sessions[j].n_delta
+        labels = np.where(merged != INT64_MAX, merged, -1).astype(np.int32)
+        return AssignResult(
+            labels=labels, counts=counts, dist=dist_m, bucket=bucket,
+            seconds=time.perf_counter() - t0, staleness=staleness,
+            degraded=self.degraded)
+
+    # --- ingest -------------------------------------------------------------
+
+    def ingest(self, chunk, *,
+               request_id: Optional[str] = None) -> IngestResult:
+        """Route a chunk to its owning shards and label it online.
+
+        Atomicity posture (§15.4): deterministic failures (validation,
+        capacity) are pre-flighted before any shard is touched; a
+        mid-scatter label failure leaves earlier pieces in their shard
+        buffers but the chunk *unacked* — those orphans never reach the
+        canonical log, so the next tier compaction (rebuilding from
+        corpus + acked chunks only) sheds them, and an idempotent retry
+        under the same ``request_id`` is absorbed piece-wise by each
+        session's dedup window. Online labels of fresh (corpus-free)
+        clusters are deterministic and collision-free across shards:
+        ``tier.n + shard_id + n_shards * local_index``.
+        """
+        chunk = validate_points(chunk, name="chunk")
+        ticket = self.admission.admit(len(chunk))
+        t0 = time.perf_counter()
+        try:
+            return self._ingest_admitted(chunk, request_id)
+        finally:
+            self.admission.finish(ticket, time.perf_counter() - t0)
+
+    def _ingest_admitted(self, chunk: np.ndarray,
+                         request_id: Optional[str]) -> IngestResult:
+        if request_id is not None and self.dedup_window > 0:
+            hit = self._dedup.get(request_id)
+            if hit is not None:
+                digest, result = hit
+                if digest != _digest(chunk):
+                    raise ValidationError(
+                        f"request_id {request_id!r} replayed with a "
+                        "different payload — at-least-once delivery must "
+                        "not mutate the request", request_id=request_id)
+                return result._replace(deduped=True)
+        owner = self.map.owner_of(chunk)
+        need = np.bincount(owner, minlength=len(self.parts))
+        if np.any(need > self.delta_capacity):
+            j = int(np.argmax(need))
+            raise ValidationError(
+                f"chunk routes {int(need[j])} points to shard {j}, over "
+                f"delta_capacity={self.delta_capacity}; split it or raise "
+                "the capacity")
+        over = [j for j in range(len(self.parts))
+                if self.sessions[j].n_delta + need[j] > self.delta_capacity]
+        if over:
+            # fold the tier first; shed the whole chunk (no partial state)
+            # when the breaker is holding compaction
+            if not self._compact_maybe():
+                sids = ", ".join(f"shard-{j:03d}" for j in over)
+                raise AdmissionError(
+                    f"tier: delta buffer(s) full on {sids} and compaction "
+                    "is circuit-broken; retry after the breaker's next "
+                    "probe window",
+                    retry_after=max(self.breaker.retry_after(), 0.001),
+                    n_delta=self.n_delta, session_id=sids)
+            owner = self.map.owner_of(chunk)  # re-split moved the cuts
+        labels = np.full(len(chunk), -1, np.int64)
+        degraded = False
+        self._routing = True
+        try:
+            for j in np.unique(owner):
+                idx = np.nonzero(owner == j)[0]
+                rid = (f"{request_id}/shard-{int(j):03d}"
+                       if request_id is not None else None)
+                res = self.sessions[j].ingest(chunk[idx], request_id=rid)
+                labels[idx] = self._remap_online(int(j), res.labels)
+                degraded |= res.degraded
+        finally:
+            self._routing = False
+        # the chunk is fully applied: it enters the canonical log (ack)
+        self._chunks.append(np.array(chunk, np.float32, copy=True))
+        compacted = False
+        if self._compaction_due() and self._compact_maybe():
+            compacted = True
+        result = IngestResult(
+            labels=labels.astype(np.int32), compacted=compacted,
+            n_delta=self.n_delta, degraded=degraded or self.degraded)
+        if request_id is not None and self.dedup_window > 0:
+            self._dedup[request_id] = (_digest(chunk), result)
+            while len(self._dedup) > self.dedup_window:
+                self._dedup.popitem(last=False)
+        return result
+
+    def _remap_online(self, shard_id: int,
+                      local_labels: np.ndarray) -> np.ndarray:
+        """Shard-local online labels -> tier label space. Corpus-anchored
+        ids go through the shard's table; fresh-cluster ids (≥ the shard
+        corpus size) map to ``tier.n + shard_id + n_shards * local`` —
+        deterministic, and distinct shards produce distinct residues so
+        fresh clusters can never collide across shards."""
+        lab = np.asarray(local_labels).astype(np.int64)
+        n_shard = self.sessions[shard_id].snapshot.n
+        table = self.parts[shard_id].label_table.astype(np.int64)
+        fresh = lab >= n_shard
+        anchored = (lab >= 0) & ~fresh
+        out = np.full_like(lab, -1)
+        if table.size:
+            out[anchored] = table[np.clip(lab[anchored], 0, table.size - 1)]
+        out[fresh] = (self.n_baseline + shard_id
+                      + len(self.parts) * (lab[fresh] - n_shard))
+        return out
+
+    @property
+    def n_baseline(self) -> int:
+        """Corpus size at the last compaction — the base for fresh online
+        cluster ids (mirrors the single session's ``n_corpus + idx``)."""
+        return len(self._corpus)
+
+    # --- compaction ---------------------------------------------------------
+
+    def _compaction_due(self) -> bool:
+        return any(
+            s.n_delta >= self.delta_capacity
+            or s.n_delta >= self.max_delta_frac * s.snapshot.n
+            for s in self.sessions)
+
+    def _compact_for(self, shard_id: int) -> bool:
+        """`on_compact` delegate: a shard's full buffer asks the *tier*
+        to fold (labels are global — §15.4). Deferred while a chunk is
+        mid-scatter or the breaker is open."""
+        return self._compact_maybe()
+
+    def _compact_maybe(self) -> bool:
+        if self._routing or not self.breaker.allow():
+            self._compaction_deferred = True
+            return False
+        try:
+            self.compact(_gated=False)
+            return True
+        except CompactionError:
+            return False
+
+    def compact(self, *, force: bool = False,
+                _gated: bool = True) -> None:
+        """Tier-global compaction (§15.4): rebuild one global snapshot
+        from the canonical corpus + the arrival-ordered acked-chunk log
+        (exactly the single session's concatenation order — labels stay
+        bit-identical to the unsharded path), re-split by Morton range,
+        and hand every session its new shard. Per shard, the swap runs
+        through :meth:`ServeSession.adopt_snapshot`: namespaced atomic
+        checkpoint publish, WAL watermark, keep-K + WAL GC. Failures trip
+        the shared breaker; every shard keeps serving its last published
+        snapshot (degraded/staleness-flagged) instead of stalling."""
+        if _gated and not force and not self.breaker.allow():
+            raise CompactionError(
+                "tier compaction circuit breaker is open "
+                f"(state={self.breaker.state}); force=True to probe now",
+                retry_after=self.breaker.retry_after())
+        try:
+            faults.fire("serve.compact")  # same chaos site as the single
+            #   session: fault suites drive the tier identically
+            pts = (np.concatenate([self._corpus] + self._chunks)
+                   if self._chunks else self._corpus)
+            snap = build_snapshot(pts, self.eps, self.min_pts,
+                                  engine=self.engine, backend=self.backend)
+            smap, parts = split_snapshot(snap, self.n_shards_requested)
+        except Exception as e:
+            self.breaker.record_failure()
+            self._compaction_deferred = True
+            raise CompactionError(
+                f"tier compaction rebuild failed ({type(e).__name__}: "
+                f"{e}); all shards keep serving their last published "
+                "snapshots", retry_after=self.breaker.retry_after()) from e
+        self.breaker.record_success()
+        self._corpus = np.asarray(pts, np.float32)
+        self._chunks = []
+        self._adopt(smap, parts)
+        self.n_compactions += 1
+        self._compaction_deferred = False
+
+    def close(self) -> None:
+        for sess in self.sessions:
+            if sess.wal is not None:
+                sess.wal.close()

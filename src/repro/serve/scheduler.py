@@ -45,6 +45,7 @@ class BucketScheduler:
         self.calls: int = 0
         self.recompiles: int = 0
         self.regrows: int = 0
+        self.routed = collections.Counter()  # shards-per-query histogram
         self._latencies = collections.deque(maxlen=self.latency_window)
 
     # --- shape bucketing ---------------------------------------------------
@@ -99,6 +100,14 @@ class BucketScheduler:
         self.calls += 1
         self._latencies.append(seconds)
 
+    def note_route(self, shards_per_query) -> None:
+        """Record the sharded router's fan-out: one histogram bump per
+        query, keyed by how many shards its ε-dilated window touched
+        (DESIGN.md §15.2 — the locality claim is that this is almost
+        always 1, occasionally 2, and 0 for far-away queries)."""
+        self.routed.update(int(v) for v in np.asarray(shards_per_query)
+                           .ravel())
+
     def note_regrow(self) -> None:
         """Record one slab overflow → regrow retry (assign or delta
         labeling). A nonzero steady-state rate means the corpus plan's
@@ -112,6 +121,7 @@ class BucketScheduler:
         self.calls = 0
         self.recompiles = 0
         self.regrows = 0
+        self.routed.clear()
         self._latencies.clear()
 
     def latency_percentiles(self, qs=(50, 99)) -> tuple:

@@ -161,7 +161,8 @@ def _spec_from_meta(d: dict) -> grid_mod.CSRGridSpec:
 
 def save_snapshot(snapshot: ClusterSnapshot, ckpt_dir: str, *,
                   step: int = 0, keep: int = 3,
-                  wal_offset: int | None = None, pin=()) -> str:
+                  wal_offset: int | None = None, pin=(),
+                  namespace: str | None = None) -> str:
     """Publish a snapshot atomically (checkpoint machinery: tmp dir +
     rename, keep-K gc). ``step`` versions successive snapshots — ingest
     compactions bump it, and the newest complete one wins on load.
@@ -172,6 +173,10 @@ def save_snapshot(snapshot: ClusterSnapshot, ckpt_dir: str, *,
     atomic rename, making the watermark crash-consistent even when the
     WAL's own WATERMARK record never lands (DESIGN.md §14.3). ``pin``
     forwards watermark-referenced steps to the keep-K GC.
+
+    ``namespace`` (e.g. a shard id) scopes the step sequence to its own
+    subdirectory — the sharded tier's per-shard publishes then can never
+    GC or pin across each other (DESIGN.md §15).
     """
     meta = {
         "kind": "cluster_snapshot",
@@ -184,19 +189,21 @@ def save_snapshot(snapshot: ClusterSnapshot, ckpt_dir: str, *,
     if wal_offset is not None:
         meta["wal_offset"] = int(wal_offset)
     return ckpt.save(ckpt_dir, step, snapshot, meta=meta, keep=keep,
-                     pin=pin)
+                     pin=pin, namespace=namespace)
 
 
-def published_wal_offsets(ckpt_dir: str) -> dict:
+def published_wal_offsets(ckpt_dir: str, *,
+                          namespace: str | None = None) -> dict:
     """``{step: wal_offset}`` of every published snapshot whose meta is
     readable and carries a watermark. The minimum over the *newest
     keep-K* of these is the WAL GC bound — the log always covers every
     keep-K baseline's replay suffix (unreadable metas are skipped: their
     step can't baseline a recovery anyway)."""
+    root = ckpt.namespace_dir(ckpt_dir, namespace)
     out = {}
-    for s in ckpt.available_steps(ckpt_dir):
+    for s in ckpt.available_steps(root):
         try:
-            path = os.path.join(ckpt_dir, f"step_{s:010d}", "meta.json")
+            path = os.path.join(root, f"step_{s:010d}", "meta.json")
             with open(path) as f:
                 meta = json.load(f)["meta"]
         except (OSError, ValueError, KeyError):
@@ -231,7 +238,7 @@ def _load_snapshot_step(ckpt_dir: str, step: int) -> tuple:
 
 
 def load_snapshot(ckpt_dir: str, *, step: int | None = None,
-                  with_meta: bool = False):
+                  with_meta: bool = False, namespace: str | None = None):
     """Load the newest *intact* snapshot (or a specific ``step``).
 
     Incomplete ``*.tmp*`` leftovers from a crash mid-write are never
@@ -251,6 +258,7 @@ def load_snapshot(ckpt_dir: str, *, step: int | None = None,
     carries ``step`` and (for durable sessions) ``wal_offset`` — what
     :meth:`ServeSession.recover` needs to pick its replay suffix.
     """
+    ckpt_dir = ckpt.namespace_dir(ckpt_dir, namespace)
     if step is not None:
         snap, meta = _load_snapshot_step(ckpt_dir, step)
         return (snap, meta) if with_meta else snap

@@ -1,0 +1,312 @@
+"""Sharded serving tier (DESIGN.md §15): split/route/merge parity.
+
+Acceptance bar (ISSUE 9): sharded ``assign`` and ingest-then-compact are
+bit-identical to the single-snapshot path across the full parity suite;
+queries on/within ε of a Morton range boundary route to both shards and
+merge exactly; an all-points-in-one-shard degenerate split still serves;
+per-shard checkpoint namespaces isolate keep-K GC and watermark pins;
+delta-overflow sheds name the owning shard.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.core.dbscan import dbscan
+from repro.data import synth
+from repro.distributed import checkpoint as ckpt
+
+EPS, MINPTS = 0.05, 8
+
+
+def _parity_cases():
+    """Same suite as test_serve plus the line corpus used for boundary
+    routing (skewed2d / duplicates / n=2 / all-noise — the ISSUE 9 gate)."""
+    rng = np.random.default_rng(0)
+    base = rng.uniform(0, 1, (80, 3)).astype(np.float32)
+    dup = np.concatenate([base, base, base[:30]])
+    spread = (rng.uniform(0, 100, (60, 3)) * np.array([1, 1, 0])) \
+        .astype(np.float32)
+    return {
+        "skewed2d": synth.load("skewed2d", 1200, seed=4),
+        "duplicates": dup,
+        "n2": np.asarray([[0., 0., 0.], [0.01, 0., 0.]], np.float32),
+        "all_noise": spread,
+    }
+
+
+def _domain_queries(pts, m, seed=5):
+    rng = np.random.default_rng(seed)
+    lo, hi = pts.min(0), pts.max(0)
+    q = rng.uniform(lo - 2 * EPS, hi + 2 * EPS, (m, 3)).astype(np.float32)
+    if np.all(pts[:, 2] == pts[0, 2]):
+        q[:, 2] = pts[0, 2]
+    return q
+
+
+def _tier_global_labels(tier):
+    """Reassemble the tier's canonical-order global labels/core from its
+    shard-local parts — what the §15.3 remap tables are for."""
+    n = sum(p.n for p in tier.parts)
+    lab = np.full(n, -2, np.int64)
+    core = np.zeros(n, bool)
+    for p in tier.parts:
+        loc = np.asarray(p.snapshot.labels)
+        g = np.full(len(loc), -1, np.int64)
+        if p.label_table.size:
+            m = loc >= 0
+            g[m] = p.label_table.astype(np.int64)[loc[m]]
+        lab[p.orig_index] = g
+        core[p.orig_index] = np.asarray(p.snapshot.core)
+    assert (lab != -2).all(), "shard rows must partition the corpus"
+    return lab, core
+
+
+@pytest.mark.parametrize("name", list(_parity_cases()))
+@pytest.mark.parametrize("k", [2, 3])
+def test_sharded_assign_bit_identical(name, k):
+    pts = _parity_cases()[name]
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    tier = serve.ShardedTier.from_snapshot(snap, n_shards=k)
+    q = _domain_queries(pts, 137)
+    r1 = serve.assign(snap, q)
+    r2 = tier.assign(q)
+    np.testing.assert_array_equal(r1.labels, r2.labels)
+    np.testing.assert_array_equal(r1.counts, r2.counts)
+    np.testing.assert_array_equal(r1.dist, r2.dist)  # bit-identical, no tol
+
+
+@pytest.mark.parametrize("name", list(_parity_cases()))
+def test_sharded_ingest_then_compact_bit_identical(name):
+    pts = _parity_cases()[name]
+    n = len(pts)
+    half = max(n // 2, 1)
+    tier = serve.ShardedTier.build(pts[:half], EPS, MINPTS, n_shards=3,
+                                   max_delta_frac=np.inf)
+    sess = serve.ServeSession(serve.build_snapshot(pts[:half], EPS, MINPTS),
+                              max_delta_frac=np.inf)
+    for i in range(half, n, 64):
+        chunk = pts[i:i + 64]
+        res = tier.ingest(chunk)
+        assert res.labels.shape == (len(chunk),)
+        sess.ingest(chunk)
+    tier.compact(force=True)
+    sess.compact(force=True)
+    ref = dbscan(pts, EPS, MINPTS, engine="grid")
+    lab, core = _tier_global_labels(tier)
+    np.testing.assert_array_equal(lab, np.asarray(ref.labels))
+    np.testing.assert_array_equal(core, np.asarray(ref.core))
+    np.testing.assert_array_equal(lab, np.asarray(sess.snapshot.labels))
+    q = _domain_queries(pts, 99, seed=7)
+    r1 = sess.assign(q)
+    r2 = tier.assign(q)
+    np.testing.assert_array_equal(r1.labels, r2.labels)
+    np.testing.assert_array_equal(r1.dist, r2.dist)
+
+
+def _line_corpus(n=400):
+    """A dense line along x (spacing ε/4 → every interior point is core):
+    2D Morton code of (cx, 0) is monotone in cx, so sorted order is x
+    order and the shard cut is a *spatial* boundary we can aim queries
+    at."""
+    x = np.arange(n, dtype=np.float32) * (EPS / 4)
+    pts = np.zeros((n, 3), np.float32)
+    pts[:, 0] = x
+    return pts
+
+
+def test_boundary_queries_route_to_both_shards_and_merge_exactly():
+    pts = _line_corpus()
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    tier = serve.ShardedTier.from_snapshot(snap, n_shards=2)
+    assert tier.n_shards == 2
+    smap = tier.map
+    cut_pos = int(smap.pos_cuts[1])
+    # first corpus point of shard 1 in sorted (== x) order
+    order = np.asarray(snap.order)
+    b = np.asarray(snap.points)[order[cut_pos]]
+    # on the boundary, and within ε each side of it
+    q = np.stack([b,
+                  b - [EPS * 0.5, 0, 0],
+                  b + [EPS * 0.5, 0, 0],
+                  b - [EPS * 0.99, 0, 0],
+                  b + [EPS * 0.99, 0, 0]]).astype(np.float32)
+    mask = smap.window_shards(q)
+    assert mask.shape == (len(q), 2)
+    # ε-dilation must make every boundary-straddling query see both sides
+    assert mask[0].all(), "a query ON the cut must route to both shards"
+    assert (mask.sum(axis=1) >= 1).all()
+    assert mask[:, 0].any() and mask[:, 1].any()
+    r1 = serve.assign(snap, q)
+    r2 = tier.assign(q)
+    np.testing.assert_array_equal(r1.labels, r2.labels)
+    np.testing.assert_array_equal(r1.counts, r2.counts)
+    np.testing.assert_array_equal(r1.dist, r2.dist)
+    # the line is one cluster: the merged label must survive the split
+    assert (r2.labels == r1.labels[0]).all() and r1.labels[0] >= 0
+
+
+def test_degenerate_all_points_one_shard():
+    # one Morton code total: every cut snaps to the same run boundary and
+    # collapses — the tier degrades to a single shard but still serves
+    pts = np.tile(np.asarray([[0.3, 0.4, 0.0]], np.float32), (50, 1))
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    tier = serve.ShardedTier.from_snapshot(snap, n_shards=4)
+    assert tier.n_shards == 1
+    assert (tier.map.owner_of(pts) == 0).all()
+    q = np.asarray([[0.3, 0.4, 0.0], [5.0, 5.0, 0.0]], np.float32)
+    r1 = serve.assign(snap, q)
+    r2 = tier.assign(q)
+    np.testing.assert_array_equal(r1.labels, r2.labels)
+    np.testing.assert_array_equal(r1.counts, r2.counts)
+    assert r2.labels[0] == 0 and r2.labels[1] == -1
+
+
+def test_split_partitions_canonical_corpus():
+    pts = synth.load("skewed2d", 800, seed=2)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    smap, parts = serve.split_snapshot(snap, 3)
+    rows = np.concatenate([p.orig_index for p in parts])
+    assert sorted(rows.tolist()) == list(range(len(pts)))
+    for p in parts:
+        np.testing.assert_array_equal(np.asarray(p.snapshot.points),
+                                      pts[p.orig_index])
+        # label table is ascending (the monotone-remap invariant)
+        assert (np.diff(p.label_table) > 0).all() \
+            if p.label_table.size > 1 else True
+    # ownership matches the split: each shard's points route home
+    for p in parts:
+        assert (smap.owner_of(pts[p.orig_index]) == p.shard_id).all()
+
+
+def test_overflow_shed_names_owning_shard():
+    pts = synth.load("skewed2d", 600, seed=4)
+    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=2,
+                                   delta_capacity=64,
+                                   max_delta_frac=np.inf)
+    rng = np.random.default_rng(3)
+    chunk = pts[rng.integers(0, len(pts), 60)] + rng.normal(
+        0, EPS / 10, (60, 3)).astype(np.float32)
+    chunk[:, 2] = 0
+    with serve.faults.inject("serve.compact", times=-1,
+                             error=RuntimeError("injected rebuild fail")):
+        tier.ingest(chunk)          # fills buffers
+        with pytest.raises(serve.AdmissionError) as ei:
+            for _ in range(8):      # overflow + broken compaction -> shed
+                tier.ingest(chunk + rng.normal(0, EPS / 10, chunk.shape)
+                            .astype(np.float32) * [1, 1, 0])
+        assert "shard-" in str(ei.value)
+        assert ei.value.details.get("session_id")
+        assert ei.value.retry_after is not None
+
+
+def test_single_session_shed_includes_session_id():
+    pts = synth.load("skewed2d", 300, seed=4)
+    sess = serve.ServeSession(serve.build_snapshot(pts, EPS, MINPTS),
+                              session_id="shard-007", delta_capacity=32,
+                              max_delta_frac=np.inf)
+    chunk = pts[:30]
+    with serve.faults.inject("serve.compact", times=-1,
+                             error=RuntimeError("injected rebuild fail")):
+        sess.ingest(chunk)
+        with pytest.raises(serve.AdmissionError) as ei:
+            sess.ingest(chunk)
+    assert "shard-007" in str(ei.value)
+    assert ei.value.details.get("session_id") == "shard-007"
+
+
+def test_delegated_session_refuses_local_compact():
+    pts = synth.load("skewed2d", 300, seed=4)
+    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=2)
+    with pytest.raises(serve.ServeError, match="tier"):
+        tier.sessions[0].compact()
+
+
+def test_checkpoint_namespace_isolates_gc_and_pins(tmp_path):
+    """Satellite 2 regression: shard A churning through keep-K steps can
+    never GC shard B's pinned baseline — namespaces do not share a step
+    listing."""
+    root = str(tmp_path)
+    tree = {"x": np.arange(4)}
+    ckpt.save(root, 0, tree, keep=2, namespace="shard-001")  # B's baseline
+    for s in range(12):  # A churns far past keep
+        ckpt.save(root, s, tree, keep=2, namespace="shard-000")
+    assert ckpt.available_steps(root, namespace="shard-000") == [10, 11]
+    assert ckpt.available_steps(root, namespace="shard-001") == [0]
+    # pins are namespace-local too: pinning B's step number in A's
+    # sequence must not resurrect or retain anything in B
+    ckpt.save(root, 12, tree, keep=1, pin=(0,), namespace="shard-000")
+    assert 0 not in ckpt.available_steps(root, namespace="shard-000")[1:]
+    assert ckpt.available_steps(root, namespace="shard-001") == [0]
+    restored, _ = ckpt.restore(root, tree, namespace="shard-001")
+    np.testing.assert_array_equal(restored["x"], tree["x"])
+    # namespaces must be clean path components
+    with pytest.raises(ValueError):
+        ckpt.save(root, 0, tree, namespace="a/b")
+    with pytest.raises(ValueError):
+        ckpt.save(root, 0, tree, namespace="step_0000000001")
+
+
+def test_tier_durable_publish_per_shard_namespaces(tmp_path):
+    pts = synth.load("skewed2d", 500, seed=4)
+    ckpt_root = str(tmp_path / "snap")
+    wal_root = str(tmp_path / "wal")
+    tier = serve.ShardedTier.build(
+        pts, EPS, MINPTS, n_shards=2, max_delta_frac=np.inf,
+        ckpt_root=ckpt_root, wal_root=wal_root, durability="none")
+    try:
+        assert tier.n_shards == 2
+        for j in range(tier.n_shards):
+            ns = f"shard-{j:03d}"
+            # step-0 baseline published per shard at bring-up
+            assert ckpt.available_steps(ckpt_root, namespace=ns) == [0]
+            assert os.path.isdir(os.path.join(wal_root, ns))
+        tier.ingest(pts[:100] + np.float32(EPS / 7))
+        tier.compact(force=True)
+        for j in range(tier.n_shards):
+            ns = f"shard-{j:03d}"
+            steps = ckpt.available_steps(ckpt_root, namespace=ns)
+            assert steps[-1] >= 1  # compaction republished every shard
+            offs = serve.published_wal_offsets(ckpt_root, namespace=ns)
+            assert offs, "per-shard WAL watermark must be embedded"
+            snap = serve.load_snapshot(ckpt_root, namespace=ns)
+            assert snap.n == tier.parts[j].n
+    finally:
+        tier.close()
+
+
+def test_replicas_round_robin_with_zero_new_traces():
+    pts = synth.load("skewed2d", 600, seed=4)
+    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=2)
+    tier.warmup(512)
+    assert tier.replicate(0, copies=1) == 1
+    tier.scheduler.reset_stats()
+    q = _domain_queries(pts, 100, seed=11)
+    for _ in range(4):
+        tier.assign(q)
+    # replicas share the shard's plan: same trace keys, zero recompiles
+    assert tier.scheduler.recompiles == 0
+    served = [k for k in tier.replica_served if k[0] == 0]
+    assert len(set(served)) == 2, "round-robin must touch both copies"
+    # routing telemetry: fan-out histogram is bounded by the shard count
+    assert set(tier.scheduler.routed) <= {0, 1, 2}
+    assert sum(tier.scheduler.routed.values()) == 4 * len(q)
+
+
+def test_tier_degrades_instead_of_stalling():
+    pts = synth.load("skewed2d", 500, seed=4)
+    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=2,
+                                   max_delta_frac=0.05)
+    q = _domain_queries(pts, 50, seed=13)
+    with serve.faults.inject("serve.compact", times=-1,
+                             error=RuntimeError("injected rebuild fail")):
+        r = tier.ingest(pts[:64] + np.float32(EPS / 9))  # compaction due
+        assert r.degraded and not r.compacted
+        ra = tier.assign(q)
+        assert ra.degraded and ra.staleness >= 0
+        with pytest.raises(serve.CompactionError):
+            tier.compact()
+    tier.compact(force=True)
+    ra = tier.assign(q)
+    assert not ra.degraded and tier.n_delta == 0
