@@ -590,6 +590,78 @@ def bench_serve(full: bool = False):
           f"speedup_shard2={qps[2] / qps[1]:.2f},"
           f"speedup_shard4={qps[4] / qps[1]:.2f},"
           f"qps_1shard={qps[1]:.0f}", engine="grid")
+
+    # --- failure domains (DESIGN.md §16): availability metrics, not speed
+    # claims (informational keys — the ratio gate must not flake on them).
+    # assign_shard_down: the same ragged stream with one of 4 shards
+    # quarantined — answers keep flowing as flagged partials, still at
+    # zero recompiles (a missing leg is routing, not retracing).
+    sch_d = serve.BucketScheduler()
+    tier_d = serve.ShardedTier.from_snapshot(snap_sk, n_shards=4,
+                                             scheduler=sch_d,
+                                             auto_recover=False)
+    for b in sch_d.buckets_upto(4096):
+        tier_d.assign(np.zeros((b, 3), np.float32))
+    for q in shard_stream(47):                   # prime the exact stream
+        tier_d.assign(q)
+    tier_d.health.force_down((0, 0))             # 1 of 4 shards down
+    sch_d.reset_stats()
+    n_q = n_partial = 0
+    t0 = time.perf_counter()
+    for q in shard_stream(47):
+        rq = tier_d.assign(q)
+        n_partial += int(rq.partial)
+        n_q += len(q)
+    dt = time.perf_counter() - t0
+    p50, p99 = sch_d.latency_percentiles()
+    r.row("assign_shard_down@shards=4", dt,
+          f"qps={n_q / dt:.0f},p99_s={p99:.5f},"
+          f"partial_frac={n_partial / n_shard_req:.2f},"
+          f"recompiles={sch_d.recompiles}", engine="grid")
+    assert sch_d.recompiles == 0, \
+        f"shard-down stream retraced {sch_d.recompiles}x"
+
+    # failover_latency: a replicated shard answering aimed queries — p50
+    # with the rotation healthy, p50 with the primary quarantined (the
+    # replica inherits every turn), and the one-off cost of an
+    # error-driven failover leg (one failed attempt + the ring walk).
+    from repro.serve.resilience import CapacityError
+    sch_f = serve.BucketScheduler()
+    tier_f = serve.ShardedTier.from_snapshot(snap_sk, n_shards=2,
+                                             scheduler=sch_f,
+                                             auto_recover=False,
+                                             hedge=False)
+    tier_f.replicate(0, copies=1)
+    tier_f.warmup(512)
+    qf = np.asarray(tier_f.parts[0].snapshot.points)[:512]
+    n_calls = 15
+    tier_f.assign(qf)                            # prime slab regrows
+
+    def _p50_assign():
+        ts = []
+        for _ in range(n_calls):
+            t1 = time.perf_counter()
+            tier_f.assign(qf)
+            ts.append(time.perf_counter() - t1)
+        return float(np.median(ts))
+
+    sch_f.reset_stats()
+    p50_healthy = _p50_assign()
+    faults.inject("serve.shard.assign", times=1, tag="shard-000/r0",
+                  error=CapacityError("bench: primary wedged"))
+    t1 = time.perf_counter()
+    tier_f.assign(qf)                            # failed leg + failover
+    t_failover = time.perf_counter() - t1
+    tier_f.health.force_down((0, 0))
+    p50_down = _p50_assign()
+    r.row("failover_latency@shards=2", t_failover,
+          f"p50_healthy_s={p50_healthy:.5f},"
+          f"p50_primary_down_s={p50_down:.5f},"
+          f"failover_call_s={t_failover:.5f},"
+          f"failovers={sch_f.failovers},"
+          f"recompiles={sch_f.recompiles}", engine="grid")
+    assert sch_f.recompiles == 0, \
+        f"failover stream retraced {sch_f.recompiles}x"
     return r.rows
 
 

@@ -26,12 +26,26 @@ Morton-range shards behind the router —
 streams ingest through per-shard delta buffers, compacts at tier scope,
 and verifies the reassembled shard-local labels are bit-identical to
 batch ``dbscan()`` on everything ingested (exit 1 on mismatch).
+
+Shard chaos (DESIGN.md §16): kill one shard mid-stream and watch the
+tier degrade and recover —
+
+    python examples/serve_clusters.py --shards 3 --kill-shard 1 --at 2
+
+arms a ``Kill`` on shard 1's next ingest leg at chunk 2: the chunk sheds
+UNACKED, the shard quarantines, queries keep answering (partial gathers,
+flagged per shard), the shard re-materializes from its own checkpoint
+namespace, the shed chunk retries idempotently, and the run exits
+nonzero unless post-recovery labels are still bit-identical to batch
+``dbscan()``.
 """
 import sys, os, time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
+import shutil
 import signal
+import tempfile
 
 import numpy as np
 
@@ -114,22 +128,80 @@ def batch_demo():
           f"{sess.admission.shed}, slab regrows: {sess.scheduler.regrows}")
 
 
+def _shard_chaos_recover(tier, shard_id, i, chunk, err):
+    """The §16 failover + recovery runbook, narrated: the owner died
+    mid-scatter (chunk UNACKED), queries keep answering partially, the
+    shard re-materializes from its checkpoint namespace, and the shed
+    chunk retries idempotently."""
+    print(f"  [chaos] chunk {i} shed UNACKED: {err} "
+          f"(retry_after={err.retry_after:.2f}s)")
+    rep = tier.health_report()
+    states = {t: row["state"] for t, row in rep["targets"].items()}
+    print(f"  [chaos] health: quarantined={rep['quarantined']} "
+          f"states={states}")
+    # reads survive the death: the gather degrades to a flagged partial
+    rng = np.random.default_rng(7)
+    q = (rng.uniform(0, 8, (256, 3)) * [1, 1, 0]).astype(np.float32)
+    rq = tier.assign(q)
+    miss = sorted(j for j, s in (rq.shards or {}).items() if s.missing)
+    print(f"  [chaos] assign during quarantine: partial={rq.partial} "
+          f"missing shards={miss} (a missing shard only LOSES neighbors)")
+    t0 = time.perf_counter()
+    ok = tier.recover_shard(shard_id)
+    print(f"  [chaos] re-materialized {serve.target_tag(shard_id, None)} "
+          f"from its checkpoint namespace in "
+          f"{time.perf_counter() - t0:.2f}s: probe-certified={ok}")
+    if not ok:
+        print("  [chaos] recovery failed — shard still quarantined")
+        sys.exit(2)
+    res = tier.ingest(chunk, request_id=f"stream-{i}")
+    print(f"  [chaos] idempotent retry of chunk {i} after recovery: acked")
+    return res
+
+
 def sharded_demo(args):
     # --- split a clustered corpus across Morton-range shards ----------------
     pts = synth.load("taxi2d", args.n_corpus, seed=0)
     t0 = time.perf_counter()
-    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=args.shards)
+    knobs, tmp = {}, None
+    if args.kill_shard is not None:
+        # the chaos run needs per-shard checkpoint namespaces to
+        # re-materialize the victim from (§16.4)
+        tmp = tempfile.mkdtemp(prefix="serve-tier-chaos-")
+        knobs = dict(ckpt_root=os.path.join(tmp, "snap"),
+                     wal_root=os.path.join(tmp, "wal"),
+                     durability="none", auto_recover=False,
+                     # the certifying probe may be the recovered plan's
+                     # first-ever assign trace — on the ref backend that
+                     # is compile time, not serving latency
+                     health=serve.HealthRegistry(probe_deadline_s=60.0))
+    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=args.shards,
+                                   **knobs)
     print(f"sharded tier: n={tier.n} shards={tier.n_shards} "
           f"sizes={[p.n for p in tier.parts]} "
           f"built in {time.perf_counter() - t0:.2f}s")
+    if args.kill_shard is not None and not (
+            0 <= args.kill_shard < tier.n_shards):
+        print(f"--kill-shard {args.kill_shard} out of range "
+              f"(tier has {tier.n_shards} shards)")
+        sys.exit(2)
 
     # --- stream ingest through the router -----------------------------------
     # each chunk scatters to the shards owning its Morton codes; tier-scope
     # compaction rebuilds the global clustering and re-cuts the shards
     chunks = []
     t0 = time.perf_counter()
-    for chunk in point_stream("taxi2d", args.n_stream, CHUNK, seed=0):
-        res = tier.ingest(chunk)
+    for i, chunk in enumerate(point_stream("taxi2d", args.n_stream, CHUNK,
+                                           seed=0)):
+        if args.kill_shard is not None and i == args.at:
+            victim = serve.target_tag(args.kill_shard, 0)
+            serve.faults.inject("serve.shard.ingest", times=1, tag=victim,
+                                error=serve.faults.Kill("chaos"))
+            print(f"  [chaos] armed a kill on {victim}'s next ingest leg")
+        try:
+            res = tier.ingest(chunk, request_id=f"stream-{i}")
+        except serve.AdmissionError as e:
+            res = _shard_chaos_recover(tier, args.kill_shard, i, chunk, e)
         chunks.append(chunk)
         tag = "compacted" if res.compacted else f"delta={res.n_delta}"
         print(f"  ingest {len(chunk)} pts ({tag}): "
@@ -138,6 +210,17 @@ def sharded_demo(args):
     dt = time.perf_counter() - t0
     print(f"ingested {n_in} pts in {dt:.2f}s ({n_in / dt:.0f} pts/s, "
           f"{tier.n_compactions} tier compactions)")
+    if args.kill_shard is not None:
+        if serve.faults.fired_count("serve.shard.ingest") == 0:
+            print("chaos kill never fired — no chunk after --at routed to "
+                  f"shard {args.kill_shard} (raise --n-stream or lower "
+                  "--at); refusing to report a green chaos run")
+            sys.exit(2)
+        serve.faults.clear()
+    # snapshot chaos counters before the QPS section resets the scheduler
+    sch = tier.scheduler
+    chaos_stats = dict(failovers=sch.failovers, partials=sch.partials,
+                       probes=sch.probes)
     tier.compact(force=True)
 
     # --- scatter-gather assign: routed fan-out + zero recompiles ------------
@@ -175,9 +258,19 @@ def sharded_demo(args):
             g[m] = p.label_table.astype(np.int64)[loc[m]]
         lab[p.orig_index] = g
     ok = np.array_equal(lab, np.asarray(full.labels))
-    print(f"parity vs batch dbscan on {len(every)} pts across "
+    verb = ("post-recovery parity" if args.kill_shard is not None
+            else "parity")
+    print(f"{verb} vs batch dbscan on {len(every)} pts across "
           f"{tier.n_shards} shards: "
           + ("OK — bit-identical" if ok else "MISMATCH"))
+    if args.kill_shard is not None:
+        print(f"chaos telemetry: failovers={chaos_stats['failovers']} "
+              f"partials={chaos_stats['partials']} "
+              f"probes={chaos_stats['probes']} "
+              f"recompiles after warmup: {tier.scheduler.recompiles}")
+    tier.close()
+    if tmp is not None:
+        shutil.rmtree(tmp, ignore_errors=True)
     sys.exit(0 if ok else 1)
 
 
@@ -264,9 +357,18 @@ if __name__ == "__main__":
                     help="serve through a sharded tier of N Morton-range "
                          "shards and verify batch parity (exit 1 on "
                          "mismatch)")
+    ap.add_argument("--kill-shard", type=int, default=None, metavar="J",
+                    help="(with --shards) kill shard J's owner mid-stream: "
+                         "the chunk sheds UNACKED, the shard quarantines "
+                         "and re-materializes, and the run exits nonzero "
+                         "unless post-recovery labels match batch dbscan")
+    ap.add_argument("--at", type=int, default=2, metavar="K",
+                    help="arm the --kill-shard fault at stream chunk K")
     ap.add_argument("--n-corpus", type=int, default=6_000)
     ap.add_argument("--n-stream", type=int, default=2_048)
     args = ap.parse_args()
+    if args.kill_shard is not None and args.shards is None:
+        ap.error("--kill-shard requires --shards")
     if args.shards is not None:
         sharded_demo(args)
     elif args.wal_dir is None:

@@ -31,17 +31,28 @@ tables, and :class:`ShardedTier` scatter-gathers ``assign``/``ingest``
 across them — merged answers and tier compactions stay bit-identical to
 the single-snapshot path, with per-shard WALs, checkpoint namespaces,
 and a shared circuit breaker bounding any one shard's blast radius.
+
+Failure domains (``health.py``; DESIGN.md §16) finish the envelope at
+tier scope: a per-target :class:`HealthRegistry` (passive leg signals +
+active deadline-bounded probes, healthy → suspect → down → recovering),
+replica failover and hedged scatter behind the router, jittered
+:class:`Backoff` on retryable legs, partial gathers with per-shard
+:class:`LegStatus`, and per-shard quarantine/re-materialization from
+checkpoint namespaces.
 """
 from .assign import AssignResult, assign  # noqa: F401
+from .health import (DOWN, HEALTHY, RECOVERING, SUSPECT,  # noqa: F401
+                     HealthRegistry, TargetHealth)
 from .ingest import (IngestResult, RecoveryReport,  # noqa: F401
                      ServeSession)
 from .resilience import (AdmissionError, AdmissionQueue,  # noqa: F401
-                         CapacityError, CircuitBreaker, CompactionError,
-                         ServeError, SnapshotFormatError, ValidationError,
-                         validate_points)
-from .router import ShardedTier  # noqa: F401
+                         Backoff, CapacityError, CircuitBreaker,
+                         CompactionError, ServeError, SnapshotFormatError,
+                         ValidationError, validate_points)
+from .router import LegStatus, ShardedTier  # noqa: F401
 from .scheduler import BucketScheduler  # noqa: F401
-from .shard import ShardMap, ShardPart, split_snapshot  # noqa: F401
+from .shard import (ShardMap, ShardPart, split_snapshot,  # noqa: F401
+                    target_tag)
 from .snapshot import (ClusterSnapshot, build_snapshot,  # noqa: F401
                        load_snapshot, published_wal_offsets, save_snapshot)
 from .wal import WalRecord, WriteAheadLog  # noqa: F401
@@ -55,4 +66,6 @@ __all__ = [
     "SnapshotFormatError", "CircuitBreaker", "AdmissionQueue",
     "validate_points", "WalRecord", "WriteAheadLog", "faults",
     "ShardedTier", "ShardMap", "ShardPart", "split_snapshot",
+    "HealthRegistry", "TargetHealth", "HEALTHY", "SUSPECT", "DOWN",
+    "RECOVERING", "LegStatus", "Backoff", "target_tag",
 ]

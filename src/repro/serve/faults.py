@@ -37,6 +37,27 @@ Sites instrumented in this codebase (``inject`` validates the name):
     atomically published but before its WATERMARK record lands in the
     WAL: recovery must use the offset embedded in the snapshot's own
     meta, never a WAL record that may not exist.
+  * ``serve.shard.assign``      — top of one scatter leg in the sharded
+    router, before the shard's ``assign`` runs: an ``error`` models a
+    failing target, a ``Kill`` a dead one (the leg fails over / goes
+    partial — the *router* must survive a shard's death).
+  * ``serve.shard.probe``       — inside ``ShardedTier.probe`` before
+    the heartbeat assign: a ``delay`` past the probe deadline models a
+    stalled shard, an ``error``/``Kill`` a dead one.
+  * ``serve.shard.rematerialize`` — top of per-shard ``recover_shard``,
+    before the checkpoint/WAL are touched: death here leaves the shard
+    quarantined for the next attempt.
+  * ``serve.shard.ingest``      — top of one ingest scatter leg (the
+    owning shard's piece, before the session sees it): a ``Kill`` models
+    the owner dying mid-scatter — the chunk stays unacked and the
+    client's idempotent retry lands after recovery.
+
+Shard sites are *per-target*: the router passes the target's tag
+(``shard-00j/rK``, or ``shard-00j`` for shard-scoped sites) to
+:func:`fire`, and :func:`inject` accepts ``tag=`` to arm one target
+only. Matching is by prefix — ``tag="shard-001"`` hits every replica of
+shard 1, ``tag="shard-001/r0"`` only its primary, no tag hits all —
+so a chaos test can kill a specific replica while its siblings serve.
 
 Process death is simulated in-process by arming a site with
 :class:`Kill`: it derives from ``BaseException`` and the serving code
@@ -68,6 +89,10 @@ SITES = frozenset({
     "serve.wal.fsync",
     "serve.wal.rotate",
     "serve.compact.watermark",
+    "serve.shard.assign",
+    "serve.shard.probe",
+    "serve.shard.rematerialize",
+    "serve.shard.ingest",
 })
 
 
@@ -82,69 +107,91 @@ class Kill(BaseException):
 @dataclasses.dataclass
 class Fault:
     """One armed fault: fires ``times`` times (-1 = every call), sleeping
-    ``delay`` seconds and/or raising ``error`` at each firing."""
+    ``delay`` seconds and/or raising ``error`` at each firing. ``tag``
+    narrows the fault to fire-calls whose tag starts with it (per-target
+    shard faults); None matches every call at the site."""
     site: str
     error: Optional[BaseException] = None
     delay: float = 0.0
     times: int = 1
+    tag: Optional[str] = None
     fired: int = 0
 
     @property
     def armed(self) -> bool:
         return self.times < 0 or self.fired < self.times
 
+    def matches(self, tag: Optional[str]) -> bool:
+        return self.tag is None or (tag is not None
+                                    and tag.startswith(self.tag))
+
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
-        clear(self.site)
+        _REGISTRY.pop((self.site, self.tag), None)
         return False
 
 
-_REGISTRY: dict = {}
+_REGISTRY: dict = {}   # (site, tag) -> Fault
 
 
 def inject(site: str, *, error: Optional[BaseException] = None,
-           delay: float = 0.0, times: int = 1) -> Fault:
-    """Arm ``site`` (replacing any previous fault there). Returns the
-    :class:`Fault`, usable as a context manager that disarms on exit."""
+           delay: float = 0.0, times: int = 1,
+           tag: Optional[str] = None) -> Fault:
+    """Arm ``site`` (replacing any previous fault at the same
+    ``(site, tag)``). Returns the :class:`Fault`, usable as a context
+    manager that disarms on exit."""
     if site not in SITES:
         raise ValueError(f"unknown fault site {site!r}; known: "
                          + ", ".join(sorted(SITES)))
-    f = Fault(site=site, error=error, delay=delay, times=times)
-    _REGISTRY[site] = f
+    f = Fault(site=site, error=error, delay=delay, times=times, tag=tag)
+    _REGISTRY[(site, tag)] = f
     return f
 
 
-def clear(site: Optional[str] = None) -> None:
-    """Disarm one site, or every site when ``site`` is None."""
+def clear(site: Optional[str] = None, tag: Optional[str] = None) -> None:
+    """Disarm every fault at one site (any tag), or everything when
+    ``site`` is None; with ``tag`` only that exact arming."""
     if site is None:
         _REGISTRY.clear()
-    else:
-        _REGISTRY.pop(site, None)
+        return
+    for key in [k for k in _REGISTRY
+                if k[0] == site and (tag is None or k[1] == tag)]:
+        _REGISTRY.pop(key, None)
 
 
-def fire(site: str) -> bool:
+def fire(site: str, tag: Optional[str] = None) -> bool:
     """Production-side hook: fire the fault armed at ``site``, if any.
 
-    Returns True when an armed fault fired (boolean faults — e.g. a forced
-    overflow flag), after sleeping its ``delay``; raises its ``error`` if
-    one was attached. Disarmed sites return False at dict-lookup cost.
+    ``tag`` is the caller's identity at per-target sites (the router
+    passes ``shard-00j/rK``); a fault fires only when its own tag is a
+    prefix of it (untagged faults always match). The most specific armed
+    match (longest tag) fires. Returns True when an armed fault fired
+    (boolean faults — e.g. a forced overflow flag), after sleeping its
+    ``delay``; raises its ``error`` if one was attached. Disarmed sites
+    return False at dict-lookup cost on a normally empty registry.
     """
-    f = _REGISTRY.get(site)
-    if f is None or not f.armed:
+    if not _REGISTRY:
         return False
-    f.fired += 1
-    if f.delay:
-        time.sleep(f.delay)
-    if f.error is not None:
-        raise f.error
+    hit = None
+    for (s, _t), f in _REGISTRY.items():
+        if s == site and f.armed and f.matches(tag):
+            if hit is None or len(f.tag or "") > len(hit.tag or ""):
+                hit = f
+    if hit is None:
+        return False
+    hit.fired += 1
+    if hit.delay:
+        time.sleep(hit.delay)
+    if hit.error is not None:
+        raise hit.error
     return True
 
 
-def fired_count(site: str) -> int:
-    f = _REGISTRY.get(site)
-    return 0 if f is None else f.fired
+def fired_count(site: str, tag: Optional[str] = None) -> int:
+    return sum(f.fired for (s, t), f in _REGISTRY.items()
+               if s == site and (tag is None or t == tag))
 
 
 # --- file-level faults ------------------------------------------------------

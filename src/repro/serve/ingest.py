@@ -408,12 +408,19 @@ class ServeSession:
             # the buffer is hard-bounded: fold it first, or shed the chunk
             # when the breaker is holding compaction (retry once it probes)
             if not self._try_compact():
+                # price the hint from both holds: the breaker's next probe
+                # window AND one measured service time (a deferred-by-the-
+                # tier compaction leaves the breaker closed, but retrying
+                # faster than the queue drains is still pointless) — the
+                # router re-raise preserves this value verbatim (§16.2)
                 raise AdmissionError(
                     f"session {self._sid()!r}: delta buffer full "
                     f"({self.n_delta}/{self.delta_capacity}) and compaction "
                     "is circuit-broken; retry after the breaker's next "
                     "probe window",
-                    retry_after=max(self.breaker.retry_after(), 0.001),
+                    retry_after=max(self.breaker.retry_after(),
+                                    self.admission.service_estimate_s(),
+                                    0.001),
                     n_delta=self.n_delta, session_id=self.session_id)
         wal_rec = None
         if self.wal is not None and not self._replaying:

@@ -141,6 +141,38 @@ def next_slab(slab: int, n_cand: int, *, attempt: int, max_regrow: int,
     return min(slab * 2, n_cand)
 
 
+# --- retry backoff ----------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Backoff:
+    """Jittered exponential backoff for retryable scatter legs (§16.2).
+
+    ``delay(attempt, retry_after)`` is the exponential ladder
+    ``base_s · 2^attempt`` (capped at ``cap_s``) stretched by up to
+    ``jitter``× of itself, then floored at the server's ``retry_after``
+    hint — the hint is a *promise* ("nothing will change sooner"), so
+    retrying under it only burns a retry budget on a guaranteed
+    rejection. Jitter de-synchronizes concurrent legs retrying against
+    the same shard; it comes from a seeded injectable RNG so tests and
+    replays stay deterministic.
+    """
+    base_s: float = 0.05
+    cap_s: float = 2.0
+    jitter: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def delay(self, attempt: int, retry_after: float | None = None) -> float:
+        d = min(self.base_s * (2.0 ** max(attempt, 0)), self.cap_s)
+        d *= 1.0 + self.jitter * float(self._rng.random())
+        if retry_after:
+            d = max(d, float(retry_after))
+        return d
+
+
 # --- circuit breaker --------------------------------------------------------
 
 

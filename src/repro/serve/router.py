@@ -1,4 +1,5 @@
-"""Scatter-gather serving tier over Morton-range shards (DESIGN.md §15).
+"""Scatter-gather serving tier over Morton-range shards (DESIGN.md §15),
+with each shard an isolated failure domain behind the router (§16).
 
 :class:`ShardedTier` is the multi-device form of :class:`ServeSession`:
 one :class:`~repro.serve.shard.ShardMap` routes every request to the
@@ -20,32 +21,60 @@ monotone merges: counts **sum**, minroot **min** (after the shard-local
 ascending), mind2 **min** (IEEE sqrt is monotone, so min-of-dist equals
 dist-of-min bit-for-bit).
 
+**Failure domains (§16).** Every scatter leg consults a
+:class:`~repro.serve.health.HealthRegistry` keyed by ``(shard,
+replica)``: the round-robin turn-holder among *live* replicas serves;
+retryable :class:`ServeError`s are absorbed by jittered exponential
+backoff honoring ``retry_after``; a failing target is abandoned and the
+leg **fails over** down the replica ring; a *suspect* turn-holder is
+optionally **hedged** — the leg is duplicated to a second live replica
+and the first result wins, the loser's work discarded (replicas share
+the shard's buffers, so both compute identical bits: the hedge buys
+latency, never a different answer). A ``faults.Kill`` inside a leg is
+the *target's* death, not the router's — it quarantines the target
+immediately instead of propagating. When a whole leg exhausts its ring,
+the gather goes **partial**: the merged result carries ``partial=True``
+and per-shard :class:`LegStatus` rows, and the min/sum merge contract
+makes the degradation direction provable — a missing shard can only
+*lose* neighbors (counts are a lower bound, labels/dist upper bounds),
+never invent them (§16.3). Quarantined shards re-materialize from their
+checkpoint namespace (:meth:`recover_shard`, backgrounded when
+``auto_recover``), re-certified by active probes before serving again.
+
 **Ingest path.** Deltas split by Morton ownership (`ShardMap.owner_of`)
 into per-shard ``ServeSession`` buffers — per-shard WAL offsets,
-per-shard checkpoint namespaces, per-shard online labeling. Compaction
-is *triggered* per shard (a full or due buffer) but *executed* at tier
-scope: cluster labels are a global connectivity property (a boundary
-point's core status needs neighbors from both sides), so the tier
-rebuilds from the canonical corpus + the arrival-ordered chunk log —
-exactly the concatenation order the single ``ServeSession`` compacts —
-then re-splits and hands every session its new shard through
-:meth:`ServeSession.adopt_snapshot`. One regrowing/failing rebuild
-trips the *shared* circuit breaker: every shard keeps serving its last
-published snapshot, answers carry ``degraded``/``staleness``, and
-overflowing ingests shed with the owning shard named in the error
-(DESIGN.md §15.4).
+per-shard checkpoint namespaces, per-shard online labeling. Only the
+primary owns the write path (replicas are read copies), so ingest never
+fails over: a dying owner quarantines the shard and the chunk sheds as
+*retryable* — it never reached the ack log, orphan pieces on sibling
+shards are dropped by the next rebuild, and the client's idempotent
+retry after recovery is absorbed piece-wise by each session's dedup
+window. Compaction is *triggered* per shard (a full or due buffer) but
+*executed* at tier scope: cluster labels are a global connectivity
+property (a boundary point's core status needs neighbors from both
+sides), so the tier rebuilds from the canonical corpus + the
+arrival-ordered chunk log — exactly the concatenation order the single
+``ServeSession`` compacts — then re-splits and hands every session its
+new shard through :meth:`ServeSession.adopt_snapshot`. One
+regrowing/failing rebuild trips the *shared* circuit breaker (the
+rebuild is tier-global, a different failure domain than any one shard):
+every shard keeps serving its last published snapshot, answers carry
+``degraded``/``staleness``, and overflowing ingests shed with the
+owning shard named in the error (DESIGN.md §15.4).
 
 **Replication.** ``replicate(shard_id)`` adds read replicas of a hot
-shard; the router round-robins ``assign`` traffic across them. Replicas
-share the shard's plan, so they add zero new traces (and on multi-device
-hosts each replica is ``device_put`` onto its own slot).
+shard; the router round-robins ``assign`` traffic across them, skipping
+quarantined copies (a down replica never stalls the slot's turn).
+Replicas share the shard's plan, so they add zero new traces (and on
+multi-device hosts each replica is ``device_put`` onto its own slot).
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import os
 import time
 from collections import Counter, OrderedDict
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import numpy as np
@@ -53,22 +82,39 @@ import numpy as np
 from .. import distributed as dist
 from . import faults
 from .assign import AssignResult, assign
+from .health import DOWN, HEALTHY, SUSPECT, HealthRegistry
 from .ingest import IngestResult, ServeSession, _digest
-from .resilience import (AdmissionError, AdmissionQueue, CapacityError,
-                         CircuitBreaker, CompactionError,
-                         ValidationError, validate_points, CLOSED)
+from .resilience import (AdmissionError, AdmissionQueue, Backoff,
+                         CapacityError, CircuitBreaker, CompactionError,
+                         ServeError, ValidationError, validate_points,
+                         CLOSED)
 from .scheduler import BucketScheduler
-from .shard import ShardMap, split_snapshot
+from .shard import ShardMap, split_snapshot, target_tag
 from .snapshot import ClusterSnapshot, build_snapshot
 from .wal import WriteAheadLog
 
 INT64_MAX = np.iinfo(np.int64).max
 
 
+class LegStatus(NamedTuple):
+    """Outcome of one assign scatter leg — the per-shard row in
+    ``AssignResult.shards`` (§16.3)."""
+    state: str           # health state of the serving target after the leg
+    replica: int         # replica that answered; -1 = none (missing)
+    staleness: int       # this shard's ingested-but-unfolded delta points
+    degraded: bool       # shard serving under deferred compaction / missing
+    missing: bool = False  # leg exhausted: the shard contributed NOTHING
+    #                        (its neighbors are lost from the merge, never
+    #                        invented — see AssignResult.partial)
+    retries: int = 0     # retryable errors absorbed by backoff
+    failovers: int = 0   # targets abandoned before the answer
+    hedged: bool = False  # a duplicate leg was issued to a second replica
+
+
 class ShardedTier:
     """Morton-range shards behind a scatter-gather router (module
-    docstring; DESIGN.md §15). Build one with :meth:`build`, or from an
-    existing global snapshot with :meth:`from_snapshot`.
+    docstring; DESIGN.md §15–16). Build one with :meth:`build`, or from
+    an existing global snapshot with :meth:`from_snapshot`.
 
     Router knobs: ``n_shards`` (requested; the effective count can be
     smaller when code-run snapping collapses cuts), ``block_q`` /
@@ -77,6 +123,15 @@ class ShardedTier:
     ``ckpt_root``/``wal_root`` (durable mode: per-shard checkpoint
     namespaces ``shard-00j`` + per-shard WAL directories), ``devices``
     (placement override for :func:`distributed.shard_devices`).
+
+    Failure-domain knobs (§16): ``health`` (per-target registry; bring
+    your own for an injectable clock), ``hedge`` (duplicate a suspect
+    turn-holder's leg to a second replica), ``leg_retries`` + ``backoff``
+    (retryable-error budget per target and its jittered delay ladder),
+    ``allow_partial`` (exhausted legs degrade to a partial gather instead
+    of raising), ``auto_recover`` (quarantined shards re-materialize in
+    the background), ``sleep`` (injectable for deterministic backoff
+    tests).
     """
 
     def __init__(self, shard_map: ShardMap, parts: list, *, corpus,
@@ -92,7 +147,14 @@ class ShardedTier:
                  ckpt_root: Optional[str] = None,
                  wal_root: Optional[str] = None,
                  durability: str = "fsync", keep: int = 3,
-                 devices=None):
+                 devices=None,
+                 health: Optional[HealthRegistry] = None,
+                 hedge: bool = True,
+                 leg_retries: int = 2,
+                 backoff: Optional[Backoff] = None,
+                 allow_partial: bool = True,
+                 auto_recover: bool = True,
+                 sleep=time.sleep):
         self.eps = float(eps)
         self.min_pts = int(min_pts)
         self.engine = engine
@@ -109,6 +171,16 @@ class ShardedTier:
         self.scheduler = scheduler or BucketScheduler(min_bucket=block_q)
         self.breaker = breaker or CircuitBreaker()
         self.admission = admission or AdmissionQueue()
+        self.health = health or HealthRegistry()
+        self.hedge = hedge
+        self.leg_retries = int(leg_retries)
+        self.backoff = backoff or Backoff()
+        self.allow_partial = allow_partial
+        self.auto_recover = auto_recover
+        self._sleep = sleep
+        self._pool: Optional[cf.ThreadPoolExecutor] = None
+        self._recovering: set = set()
+        self._recovery_futures: dict = {}
         self._devices = dist.shard_devices(
             max(len(parts), 1), devices)
         self._multi_device = len(set(self._devices)) > 1
@@ -168,7 +240,7 @@ class ShardedTier:
 
     def _make_session(self, shard_id: int,
                       snapshot: ClusterSnapshot) -> ServeSession:
-        sid = f"shard-{shard_id:03d}"
+        sid = target_tag(shard_id, None)
         wal = None
         if self.wal_root is not None:
             wal = WriteAheadLog(os.path.join(self.wal_root, sid),
@@ -212,7 +284,7 @@ class ShardedTier:
                 for r in range(self._replica_counts.get(j, 0))]
             for j in range(len(parts))}
 
-    # --- health -------------------------------------------------------------
+    # --- shape / status ------------------------------------------------------
 
     @property
     def n_shards(self) -> int:
@@ -227,11 +299,25 @@ class ShardedTier:
     def n_delta(self) -> int:
         return sum(s.n_delta for s in self.sessions)
 
+    def _n_replicas(self, shard_id: int) -> int:
+        return 1 + len(self._extra_replicas.get(shard_id, []))
+
+    def _replica_snapshots(self, shard_id: int) -> list:
+        return ([self.sessions[shard_id].snapshot]
+                + self._extra_replicas.get(shard_id, []))
+
+    @property
+    def quarantined(self) -> list:
+        """Shard ids with no live serving copy (every target down)."""
+        return [j for j in range(len(self.parts))
+                if self.health.quarantined(j, self._n_replicas(j))]
+
     @property
     def degraded(self) -> bool:
         return (self._compaction_deferred
                 or self.breaker.state != CLOSED
-                or any(s._compaction_deferred for s in self.sessions))
+                or any(s._compaction_deferred for s in self.sessions)
+                or bool(self.quarantined))
 
     # --- replication / load balancing ---------------------------------------
 
@@ -250,14 +336,6 @@ class ShardedTier:
                                     replica=r + 1))
         return self._replica_counts[shard_id]
 
-    def _pick_replica(self, shard_id: int) -> ClusterSnapshot:
-        reps = ([self.sessions[shard_id].snapshot]
-                + self._extra_replicas.get(shard_id, []))
-        i = self._rr[shard_id] % len(reps)
-        self._rr[shard_id] += 1
-        self.replica_served[(shard_id, i)] += 1
-        return reps[i]
-
     # --- queries ------------------------------------------------------------
 
     def warmup(self, max_nq: int = 1024) -> None:
@@ -266,18 +344,19 @@ class ShardedTier:
         points of the shard itself — live windows, realistic slabs."""
         for j, part in enumerate(self.parts):
             p0 = np.asarray(part.snapshot.points)[:1]
-            snaps = ([self.sessions[j].snapshot]
-                     + self._extra_replicas.get(j, []))
             for b in self.scheduler.buckets_upto(max_nq):
                 q = np.tile(p0, (b, 1))
-                for snap in snaps:
+                for snap in self._replica_snapshots(j):
                     assign(snap, q, scheduler=self.scheduler,
                            block_q=self.block_q, backend=self.backend)
 
     def assign(self, queries) -> AssignResult:
-        """Scatter-gather DBSCAN-predict (module docstring). The merged
-        answer is bit-identical to single-snapshot ``assign`` on the
-        unsplit corpus — the §15.3 invariant the parity suite gates."""
+        """Scatter-gather DBSCAN-predict (module docstring). With every
+        routed shard serving, the merged answer is bit-identical to
+        single-snapshot ``assign`` on the unsplit corpus — the §15.3
+        invariant the parity suite gates. With a shard quarantined and
+        ``allow_partial`` on, the answer is the §16.3 *restriction*:
+        exactly the full merge minus the missing shard's contribution."""
         q_np = validate_points(queries, name="queries")
         ticket = self.admission.admit(len(q_np))
         t0 = time.perf_counter()
@@ -296,17 +375,24 @@ class ShardedTier:
         dist_m = np.full(nq, np.inf, np.float32)
         bucket = 0
         staleness = 0
+        partial = False
+        shard_status: dict = {}
         for j in range(len(self.parts)):
             idx = np.nonzero(mask[:, j])[0]
             if idx.size == 0:
                 continue
-            snap_j = self._pick_replica(j)
-            try:
-                r = assign(snap_j, q_np[idx], scheduler=self.scheduler,
-                           block_q=self.block_q, backend=self.backend)
-            except CapacityError:
-                self.breaker.record_failure()
-                raise
+            r, status = self._assign_leg(j, q_np[idx])
+            shard_status[int(j)] = status
+            staleness += status.staleness
+            if r is None:
+                # exhausted leg: the gather goes PARTIAL. The merge
+                # direction is provable from the min/sum contract — this
+                # shard's contribution could only have raised counts and
+                # lowered labels/dist, so the partial answer loses its
+                # neighbors, never invents any (§16.3)
+                partial = True
+                continue
+            bucket += r.bucket
             table = self.parts[j].label_table.astype(np.int64)
             if table.size:
                 glab = np.where(r.labels >= 0,
@@ -317,13 +403,349 @@ class ShardedTier:
             merged[idx] = np.minimum(merged[idx], glab)
             counts[idx] += r.counts
             dist_m[idx] = np.minimum(dist_m[idx], r.dist)
-            bucket += r.bucket
-            staleness += self.sessions[j].n_delta
+        if partial:
+            self.scheduler.note_partial()
         labels = np.where(merged != INT64_MAX, merged, -1).astype(np.int32)
         return AssignResult(
             labels=labels, counts=counts, dist=dist_m, bucket=bucket,
             seconds=time.perf_counter() - t0, staleness=staleness,
-            degraded=self.degraded)
+            degraded=self.degraded or partial, partial=partial,
+            shards=shard_status)
+
+    def _leg_status(self, j: int, *, replica: int, missing: bool,
+                    retries: int, failovers: int,
+                    hedged: bool) -> LegStatus:
+        return LegStatus(
+            state=(DOWN if missing
+                   else self.health.state((j, replica))),
+            replica=replica,
+            staleness=int(self.sessions[j].n_delta),
+            degraded=bool(self.sessions[j]._compaction_deferred or missing),
+            missing=missing, retries=retries, failovers=failovers,
+            hedged=hedged)
+
+    def _assign_leg(self, j: int, q_sub: np.ndarray) -> tuple:
+        """One scatter leg behind the health registry (§16.2): serve the
+        round-robin turn-holder among live replicas, hedge a suspect
+        turn-holder to a second live copy (first result wins), absorb
+        retryable errors with jittered backoff, and fail over down the
+        ring. Exhaustion returns ``(None, status)`` — the partial-gather
+        path — or re-raises the last error when ``allow_partial`` is
+        off."""
+        remaining = self.health.candidates(j, self._n_replicas(j),
+                                           start=self._rr[j])
+        self._rr[j] += 1
+        retries = failovers = 0
+        hedged = False
+        last_err = None
+        while remaining:
+            rep = remaining.pop(0)
+            if (self.hedge and remaining
+                    and self.health.state((j, rep)) == SUSPECT):
+                alt = next((r2 for r2 in remaining
+                            if self.health.state((j, r2)) == HEALTHY),
+                           remaining[0])
+                remaining.remove(alt)
+                hedged = True
+                r, winner, n_retry, err = self._hedged_pair(j, rep, alt,
+                                                            q_sub)
+                retries += n_retry
+                if err is not None:
+                    last_err = err
+                if r is not None:
+                    self.replica_served[(j, winner)] += 1
+                    return r, self._leg_status(
+                        j, replica=winner, missing=False, retries=retries,
+                        failovers=failovers, hedged=True)
+                failovers += 2
+                self.scheduler.note_failover()
+                continue
+            r, n_retry, err = self._try_target(j, rep, q_sub)
+            retries += n_retry
+            if err is not None:
+                last_err = err
+            if r is not None:
+                self.replica_served[(j, rep)] += 1
+                return r, self._leg_status(
+                    j, replica=rep, missing=False, retries=retries,
+                    failovers=failovers, hedged=hedged)
+            failovers += 1
+            self.scheduler.note_failover()
+        # ring exhausted (or empty: the whole shard is quarantined)
+        self._maybe_schedule_recovery(j)
+        if not self.allow_partial:
+            self._reraise(last_err, j)
+        return None, self._leg_status(j, replica=-1, missing=True,
+                                      retries=retries, failovers=failovers,
+                                      hedged=hedged)
+
+    def _try_target(self, j: int, rep: int, q_sub: np.ndarray) -> tuple:
+        """Bounded serve attempt(s) against one target; returns
+        ``(result | None, retries_used, last_error)``. A ``faults.Kill``
+        here is the *target's* death, not the router's — the failure-
+        domain boundary — so it is absorbed: the target quarantines
+        immediately and the leg fails over. Any other exception escaping
+        the shard's program is likewise confined to its domain (recorded
+        as a target failure, leg fails over) — only the single-session
+        path lets it propagate."""
+        key = (j, rep)
+        tag = target_tag(j, rep)
+        snaps = self._replica_snapshots(j)
+        err = None
+        for attempt in range(self.leg_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                faults.fire("serve.shard.assign", tag)
+                r = assign(snaps[rep], q_sub, scheduler=self.scheduler,
+                           block_q=self.block_q, backend=self.backend)
+            except faults.Kill:
+                self.health.force_down(key)
+                return None, attempt, AdmissionError(
+                    f"{tag} died serving an assign leg; quarantined for "
+                    "re-materialization",
+                    retry_after=self._recover_hint(),
+                    session_id=target_tag(j, None))
+            except ServeError as e:
+                err = e
+                self.health.record_failure(key)
+                if e.retryable and attempt < self.leg_retries:
+                    self.scheduler.note_leg_retry()
+                    self._sleep(self.backoff.delay(attempt, e.retry_after))
+                    continue
+                return None, attempt, e
+            except Exception as e:
+                err = e
+                self.health.record_failure(key)
+                return None, attempt, e
+            self.health.record_success(key, time.perf_counter() - t0)
+            return r, attempt, None
+        return None, self.leg_retries, err
+
+    def _hedged_pair(self, j: int, rep: int, alt: int,
+                     q_sub: np.ndarray) -> tuple:
+        """§16.2 hedge: run the suspect turn-holder and a second live
+        replica concurrently; the first successful result wins and the
+        loser's work is discarded. Replicas share the shard's buffers,
+        so both compute the same bits — the race is about latency and
+        availability, never the answer. A loser still in flight keeps
+        running on the pool and lands its health signal when it
+        finishes."""
+        self.scheduler.note_hedge()
+        ex = self._executor()
+        futs = {ex.submit(self._try_target, j, r, q_sub): r
+                for r in (rep, alt)}
+        result, winner, err, retries = None, -1, None, 0
+        pending = set(futs)
+        while pending and result is None:
+            done, pending = cf.wait(pending, return_when=cf.FIRST_COMPLETED)
+            for f in done:
+                r, n_retry, e = f.result()
+                retries += n_retry
+                if e is not None:
+                    err = e
+                if r is not None and result is None:
+                    result, winner = r, futs[f]
+        return result, winner, retries, err
+
+    def _reraise(self, err, j: int):
+        """Re-raise a leg's terminal error at tier scope, naming the
+        shard and PRESERVING ``retry_after`` — the backoff hint the
+        underlying session computed must survive the router's wrapping
+        (clients price their retry on it)."""
+        sid = target_tag(j, None)
+        if err is None:
+            raise AdmissionError(
+                f"{sid}: no live replica (quarantined); retry after "
+                "re-materialization", retry_after=self._recover_hint(),
+                session_id=sid)
+        if isinstance(err, ServeError):
+            details = dict(err.details)
+            details["session_id"] = sid
+            raise type(err)(f"{sid}: {err}", retry_after=err.retry_after,
+                            **details) from err
+        raise err
+
+    def _recover_hint(self) -> float:
+        """``retry_after`` for requests shed on a quarantined shard: with
+        background recovery running the wait is one re-materialize, not
+        a full breaker window."""
+        return 0.05 if self.auto_recover else self.health.recover_after_s
+
+    def _executor(self) -> cf.ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = cf.ThreadPoolExecutor(
+                max_workers=max(4, 2 * max(len(self.parts), 1)),
+                thread_name_prefix="shard-tier")
+        return self._pool
+
+    # --- health: probes, quarantine, recovery -------------------------------
+
+    def probe(self, shard_id: int, replica: int = 0) -> bool:
+        """Active heartbeat (§16.1): a 1-point ``assign`` of the shard's
+        own first corpus point against the target's snapshot, bounded by
+        the registry's ``probe_deadline_s`` — a stalled target *fails*
+        its probe even when it eventually answers, because to a latency
+        SLO slow is down. The 1-point batch pads to the smallest bucket
+        warmup already traced, so probes never recompile. The outcome
+        lands in the health registry with ``probe=True``."""
+        j, rep = int(shard_id), int(replica)
+        key = (j, rep)
+        tag = target_tag(j, rep)
+        snaps = self._replica_snapshots(j)
+        if not 0 <= rep < len(snaps):
+            raise ValueError(f"no replica {rep} of shard {j}")
+        self.scheduler.note_probe()
+        q = self.parts[j].probe_point
+        t0 = time.perf_counter()
+        try:
+            faults.fire("serve.shard.probe", tag)
+            assign(snaps[rep], q, scheduler=self.scheduler,
+                   block_q=self.block_q, backend=self.backend)
+        except faults.Kill:
+            self.health.record_failure(key, probe=True)
+            self.health.force_down(key)
+            return False
+        except Exception:
+            self.health.record_failure(
+                key, probe=True, latency_s=time.perf_counter() - t0)
+            return False
+        dt = time.perf_counter() - t0
+        if dt > self.health.probe_deadline_s:
+            self.health.record_failure(key, probe=True, latency_s=dt)
+            return False
+        self.health.record_success(key, dt, probe=True)
+        return True
+
+    def probe_all(self) -> dict:
+        """Heartbeat every serving target; ``{target_tag: ok}``."""
+        return {target_tag(j, r): self.probe(j, r)
+                for j in range(len(self.parts))
+                for r in range(self._n_replicas(j))}
+
+    def _maybe_schedule_recovery(self, j: int) -> None:
+        if (self.auto_recover and j not in self._recovering
+                and self.health.quarantined(j, self._n_replicas(j))):
+            self._recovering.add(j)
+            self._recovery_futures[j] = self._executor().submit(
+                self._recover_bg, j)
+
+    def _recover_bg(self, j: int) -> bool:
+        try:
+            return self.recover_shard(j)
+        except BaseException:
+            return False
+        finally:
+            self._recovering.discard(j)
+
+    def join_recovery(self, timeout: Optional[float] = None) -> bool:
+        """Block until in-flight background re-materializations finish;
+        True when none remain pending and all of them succeeded."""
+        futs = dict(self._recovery_futures)
+        if not futs:
+            return True
+        done, pending = cf.wait(set(futs.values()), timeout=timeout)
+        if pending:
+            return False
+        self._recovery_futures.clear()
+        return all(f.result() for f in done)
+
+    def recover_shard(self, shard_id: int) -> bool:
+        """Re-materialize one quarantined shard (§16.4).
+
+        Durable tiers rebuild the shard's session from its own
+        checkpoint namespace + WAL (:meth:`ServeSession.recover` —
+        newest intact snapshot, delta replayed past the watermark);
+        non-durable tiers re-place the tier's in-memory part (the dead
+        shard's unfolded delta died with it, but every *acked* chunk
+        lives in the tier's canonical log and returns at the next
+        compaction). Replicas re-materialize from the recovered
+        snapshot, then every target must pass an active probe before
+        the shard leaves quarantine; a failed re-materialize leaves it
+        quarantined for the next attempt. Synchronous — the
+        ``auto_recover`` background path wraps it.
+        """
+        j = int(shard_id)
+        sid = target_tag(j, None)
+        n_reps = 1 + self._replica_counts.get(j, 0)
+        keys = [(j, r) for r in range(n_reps)]
+        for k in keys:
+            self.health.begin_recovery(k)
+        try:
+            faults.fire("serve.shard.rematerialize", sid)
+            old = self.sessions[j]
+            if self.wal_root is not None and self.ckpt_root is not None:
+                if old.wal is not None:
+                    try:
+                        old.wal.close()
+                    except Exception:
+                        pass
+                self.sessions[j] = ServeSession.recover(
+                    self.ckpt_root, os.path.join(self.wal_root, sid),
+                    durability=self.durability,
+                    max_delta_frac=float("inf"),
+                    delta_capacity=self.delta_capacity,
+                    scheduler=self.scheduler, backend=self.backend,
+                    block_q=self.block_q, breaker=self.breaker,
+                    admission=AdmissionQueue(),
+                    dedup_window=self.dedup_window, keep=self.keep,
+                    session_id=sid, ckpt_namespace=sid,
+                    on_compact=lambda _j=j: self._compact_for(_j))
+            else:
+                self.sessions[j] = self._make_session(
+                    j, self._place(j, self.parts[j].snapshot))
+            self._extra_replicas[j] = [
+                self._place(j, self.sessions[j].snapshot, replica=r + 1)
+                for r in range(self._replica_counts.get(j, 0))]
+        except BaseException:
+            # Kill included: death *during* re-materialize leaves the
+            # shard quarantined for the next attempt (§16.4)
+            for k in keys:
+                self.health.end_recovery(k, ok=False)
+            return False
+        for k in keys:
+            self.health.end_recovery(k, ok=True)
+        # certify: every target answers a live heartbeat before the
+        # shard is trusted with traffic again
+        ok = True
+        for r in range(n_reps):
+            ok &= self.probe(j, r)
+        return bool(ok)
+
+    def health_report(self) -> dict:
+        """Operator view (§16): per-target health rows (state,
+        consecutive failures, last leg/probe latency, served count) next
+        to the tier's routing/serving telemetry — the README ops table's
+        one-call dashboard."""
+        targets = {}
+        for j in range(len(self.parts)):
+            for r in range(self._n_replicas(j)):
+                t = self.health.target((j, r))
+                targets[target_tag(j, r)] = {
+                    "state": self.health.state((j, r)),
+                    "consecutive_failures": t.consecutive_failures,
+                    "failures": t.n_failures,
+                    "successes": t.n_successes,
+                    "probes": t.n_probes,
+                    "last_latency_s": t.last_latency_s,
+                    "last_probe_s": t.last_probe_s,
+                    "last_probe_ok": t.last_probe_ok,
+                    "served": int(self.replica_served.get((j, r), 0)),
+                }
+        sch = self.scheduler
+        p50, p99 = sch.latency_percentiles()
+        return {
+            "targets": targets,
+            "quarantined": [target_tag(q, None) for q in self.quarantined],
+            "recovering": sorted(target_tag(q, None)
+                                 for q in self._recovering),
+            "scheduler": {
+                "calls": sch.calls, "recompiles": sch.recompiles,
+                "regrows": sch.regrows, "failovers": sch.failovers,
+                "hedges": sch.hedges, "leg_retries": sch.leg_retries,
+                "probes": sch.probes, "partials": sch.partials,
+                "p50_s": p50, "p99_s": p99,
+            },
+        }
 
     # --- ingest -------------------------------------------------------------
 
@@ -332,14 +754,15 @@ class ShardedTier:
         """Route a chunk to its owning shards and label it online.
 
         Atomicity posture (§15.4): deterministic failures (validation,
-        capacity) are pre-flighted before any shard is touched; a
-        mid-scatter label failure leaves earlier pieces in their shard
-        buffers but the chunk *unacked* — those orphans never reach the
-        canonical log, so the next tier compaction (rebuilding from
-        corpus + acked chunks only) sheds them, and an idempotent retry
-        under the same ``request_id`` is absorbed piece-wise by each
-        session's dedup window. Online labels of fresh (corpus-free)
-        clusters are deterministic and collision-free across shards:
+        capacity, a quarantined owner) are pre-flighted before any shard
+        is touched; a mid-scatter label failure or owner death leaves
+        earlier pieces in their shard buffers but the chunk *unacked* —
+        those orphans never reach the canonical log, so the next tier
+        compaction (rebuilding from corpus + acked chunks only) sheds
+        them, and an idempotent retry under the same ``request_id`` is
+        absorbed piece-wise by each session's dedup window. Online
+        labels of fresh (corpus-free) clusters are deterministic and
+        collision-free across shards:
         ``tier.n + shard_id + n_shards * local_index``.
         """
         chunk = validate_points(chunk, name="chunk")
@@ -370,13 +793,27 @@ class ShardedTier:
                 f"chunk routes {int(need[j])} points to shard {j}, over "
                 f"delta_capacity={self.delta_capacity}; split it or raise "
                 "the capacity")
+        down = sorted({int(j) for j in np.unique(owner)
+                       if self.health.quarantined(int(j),
+                                                  self._n_replicas(int(j)))})
+        if down:
+            # writes have one owner: a quarantined owner sheds the whole
+            # chunk *before* any scatter (no partial state to orphan)
+            for j in down:
+                self._maybe_schedule_recovery(j)
+            sids = ", ".join(target_tag(j, None) for j in down)
+            raise AdmissionError(
+                f"tier: owning shard(s) {sids} quarantined "
+                "(re-materializing); chunk shed before any scatter — "
+                "retry idempotently after recovery",
+                retry_after=self._recover_hint(), session_id=sids)
         over = [j for j in range(len(self.parts))
                 if self.sessions[j].n_delta + need[j] > self.delta_capacity]
         if over:
             # fold the tier first; shed the whole chunk (no partial state)
             # when the breaker is holding compaction
             if not self._compact_maybe():
-                sids = ", ".join(f"shard-{j:03d}" for j in over)
+                sids = ", ".join(target_tag(j, None) for j in over)
                 raise AdmissionError(
                     f"tier: delta buffer(s) full on {sids} and compaction "
                     "is circuit-broken; retry after the breaker's next "
@@ -390,9 +827,9 @@ class ShardedTier:
         try:
             for j in np.unique(owner):
                 idx = np.nonzero(owner == j)[0]
-                rid = (f"{request_id}/shard-{int(j):03d}"
+                rid = (f"{request_id}/{target_tag(int(j), None)}"
                        if request_id is not None else None)
-                res = self.sessions[j].ingest(chunk[idx], request_id=rid)
+                res = self._ingest_leg(int(j), chunk[idx], rid)
                 labels[idx] = self._remap_online(int(j), res.labels)
                 degraded |= res.degraded
         finally:
@@ -410,6 +847,46 @@ class ShardedTier:
             while len(self._dedup) > self.dedup_window:
                 self._dedup.popitem(last=False)
         return result
+
+    def _ingest_leg(self, j: int, piece: np.ndarray,
+                    rid: Optional[str]) -> IngestResult:
+        """One ingest scatter leg (§16.2). Only the shard's *primary*
+        owns the write path (replicas are read copies), so ingest never
+        fails over — a dying owner quarantines the shard and the chunk
+        sheds as *retryable*: it never reached the ack log, orphan
+        pieces already landed on sibling shards are dropped by the next
+        rebuild, and the client's idempotent retry after recovery is
+        absorbed by the dedup window. Retryable session errors go
+        through the same jittered backoff as assign legs; terminal ones
+        re-raise at tier scope with ``retry_after`` preserved."""
+        key = (j, 0)
+        tag = target_tag(j, 0)
+        err = None
+        for attempt in range(self.leg_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                faults.fire("serve.shard.ingest", tag)
+                res = self.sessions[j].ingest(piece, request_id=rid)
+            except faults.Kill:
+                self.health.force_down(key)
+                self._maybe_schedule_recovery(j)
+                raise AdmissionError(
+                    f"{tag} died mid-ingest; the chunk is UNACKED (orphan "
+                    "pieces on sibling shards shed at the next rebuild) — "
+                    "retry idempotently after recovery",
+                    retry_after=self._recover_hint(),
+                    session_id=target_tag(j, None)) from None
+            except ServeError as e:
+                err = e
+                self.health.record_failure(key)
+                if e.retryable and attempt < self.leg_retries:
+                    self.scheduler.note_leg_retry()
+                    self._sleep(self.backoff.delay(attempt, e.retry_after))
+                    continue
+                self._reraise(e, j)
+            self.health.record_success(key, time.perf_counter() - t0)
+            return res
+        self._reraise(err, j)
 
     def _remap_online(self, shard_id: int,
                       local_labels: np.ndarray) -> np.ndarray:
@@ -499,6 +976,9 @@ class ShardedTier:
         self._compaction_deferred = False
 
     def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
         for sess in self.sessions:
             if sess.wal is not None:
                 sess.wal.close()

@@ -47,6 +47,14 @@ class BucketScheduler:
         self.regrows: int = 0
         self.routed = collections.Counter()  # shards-per-query histogram
         self._latencies = collections.deque(maxlen=self.latency_window)
+        # failure-domain telemetry (DESIGN.md §16): scatter legs that
+        # failed over to another replica, hedged duplicates issued,
+        # retryable-leg retries, active probes, and partial gathers served
+        self.failovers: int = 0
+        self.hedges: int = 0
+        self.leg_retries: int = 0
+        self.probes: int = 0
+        self.partials: int = 0
 
     # --- shape bucketing ---------------------------------------------------
 
@@ -115,6 +123,28 @@ class BucketScheduler:
         the operator signal behind DESIGN.md §12's bounded-regrow cap."""
         self.regrows += 1
 
+    def note_failover(self) -> None:
+        """One scatter leg abandoned its target and moved to the next
+        live replica (or exhausted the ring into a partial gather)."""
+        self.failovers += 1
+
+    def note_hedge(self) -> None:
+        """One suspect leg was duplicated to a second replica (§16.2) —
+        first result wins, the loser's work is discarded."""
+        self.hedges += 1
+
+    def note_leg_retry(self) -> None:
+        """One retryable leg error absorbed by jittered backoff."""
+        self.leg_retries += 1
+
+    def note_probe(self) -> None:
+        """One active health heartbeat served (§16.1)."""
+        self.probes += 1
+
+    def note_partial(self) -> None:
+        """One gather answered without every routed shard (§16.3)."""
+        self.partials += 1
+
     def reset_stats(self) -> None:
         """Zero counters but *keep* the seen shape keys — the post-warmup
         recompile count should report only genuinely new traces."""
@@ -123,6 +153,11 @@ class BucketScheduler:
         self.regrows = 0
         self.routed.clear()
         self._latencies.clear()
+        self.failovers = 0
+        self.hedges = 0
+        self.leg_retries = 0
+        self.probes = 0
+        self.partials = 0
 
     def latency_percentiles(self, qs=(50, 99)) -> tuple:
         if not self._latencies:

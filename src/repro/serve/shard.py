@@ -48,6 +48,15 @@ from .snapshot import ClusterSnapshot
 INT_MAX = np.iinfo(np.int32).max
 
 
+def target_tag(shard_id: int, replica: int | None = 0) -> str:
+    """Canonical name of one serving target — ``shard-00j/rK`` (or the
+    shard-scoped ``shard-00j`` when ``replica`` is None) — shared by
+    health reports, fault-site tags, and error messages so a chaos test
+    can address the exact copy it means to kill."""
+    sid = f"shard-{shard_id:03d}"
+    return sid if replica is None else f"{sid}/r{replica}"
+
+
 def _window_offsets(dims: int) -> np.ndarray:
     rng = (-1, 0, 1)
     return np.asarray(
@@ -75,6 +84,15 @@ class ShardPart:
     @property
     def n(self) -> int:
         return self.snapshot.n
+
+    @property
+    def probe_point(self) -> np.ndarray:
+        """(1, 3) f32 heartbeat query: the shard's own first corpus point.
+        Probing with a point the shard *owns* keeps the window non-empty
+        (a real slab walk, not a trivially-empty one) and the 1-point
+        batch pads to the scheduler's smallest bucket, which warmup has
+        already traced — a probe can never recompile (§16.1)."""
+        return np.asarray(self.snapshot.points[:1], np.float32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -310,3 +310,380 @@ def test_tier_degrades_instead_of_stalling():
     tier.compact(force=True)
     ra = tier.assign(q)
     assert not ra.degraded and tier.n_delta == 0
+
+
+# --- §16: shard failure domains ---------------------------------------------
+# health-checked scatter legs, replica failover, hedging, partial gathers,
+# quarantine + re-materialization (ISSUE 10). hypothesis is optional: the
+# partial-merge property enumerates all shard subsets either way.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HYP = True
+except ImportError:  # pragma: no cover - exercised in the slim container
+    _HYP = False
+
+
+def _aimed_queries(tier, shard_id, extra=0, seed=17):
+    """Queries guaranteed to route to ``shard_id`` (its own corpus points)
+    plus ``extra`` domain-wide ones."""
+    own = np.asarray(tier.parts[shard_id].snapshot.points)[:8]
+    if extra:
+        pts = np.asarray(tier.parts[0].snapshot.points)
+        return np.concatenate([own, _domain_queries(pts, extra, seed=seed)])
+    return own
+
+
+def test_assign_failover_to_replica_bit_identical():
+    pts = synth.load("skewed2d", 600, seed=4)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    tier = serve.ShardedTier.from_snapshot(snap, n_shards=2, hedge=False,
+                                           auto_recover=False)
+    try:
+        tier.replicate(0, copies=1)
+        tier.warmup(256)
+        q = np.concatenate([_domain_queries(pts, 80, seed=29),
+                            np.asarray(tier.parts[0].snapshot.points)[:8]])
+        full = serve.assign(snap, q)
+        tier.scheduler.reset_stats()
+        with serve.faults.inject(
+                "serve.shard.assign", times=-1, tag="shard-000/r0",
+                error=serve.CapacityError("injected: r0 wedged")):
+            for _ in range(8):
+                r = tier.assign(q)
+                # the surviving replica's answer is the same bits — failover
+                # changes availability, never the merge
+                assert not r.partial
+                np.testing.assert_array_equal(r.labels, full.labels)
+                np.testing.assert_array_equal(r.counts, full.counts)
+                np.testing.assert_array_equal(r.dist, full.dist)
+            assert tier.scheduler.failovers >= 1
+            # three strikes on r0's turns -> quarantined; r1 carries the slot
+            assert tier.health.state((0, 0)) == serve.DOWN
+        assert tier.scheduler.recompiles == 0
+        assert tier.replica_served.get((0, 1), 0) >= 4
+        rep = tier.health_report()
+        assert rep["targets"]["shard-000/r0"]["state"] == serve.DOWN
+        assert rep["scheduler"]["failovers"] == tier.scheduler.failovers
+    finally:
+        tier.close()
+
+
+def test_round_robin_skips_quarantined_replica():
+    """Satellite 2: a down replica never stalls its slot's turn — the next
+    live copy inherits it, and traffic keeps spreading over survivors."""
+    pts = synth.load("skewed2d", 500, seed=4)
+    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=2,
+                                   auto_recover=False)
+    try:
+        tier.replicate(0, copies=2)          # 3 serving copies of shard 0
+        tier.warmup(256)
+        tier.health.force_down((0, 1))
+        tier.scheduler.reset_stats()
+        tier.replica_served.clear()
+        q = _aimed_queries(tier, 0)
+        for _ in range(6):
+            assert not tier.assign(q).partial
+        served = {k: v for k, v in tier.replica_served.items()
+                  if k[0] == 0}
+        assert served.get((0, 1), 0) == 0    # quarantined copy never serves
+        assert served.get((0, 0), 0) >= 1 and served.get((0, 2), 0) >= 1
+        assert sum(served.values()) == 6     # no stalled turns
+        rep = tier.health_report()
+        assert rep["targets"]["shard-000/r1"]["state"] == serve.DOWN
+        assert rep["targets"]["shard-000/r0"]["state"] == serve.HEALTHY
+        assert rep["targets"]["shard-000/r1"]["served"] == 0
+    finally:
+        tier.close()
+
+
+def test_hedged_suspect_leg_first_result_wins():
+    pts = synth.load("skewed2d", 500, seed=4)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    tier = serve.ShardedTier.from_snapshot(snap, n_shards=2,
+                                           auto_recover=False)
+    try:
+        tier.replicate(0, copies=1)
+        tier.warmup(256)
+        q = _aimed_queries(tier, 0)
+        full = serve.assign(snap, q)
+        tier.scheduler.reset_stats()
+        # one strike makes the turn-holder suspect; its leg is hedged to
+        # the healthy copy and the first result wins
+        tier.health.record_failure((0, 0))
+        assert tier.health.state((0, 0)) == serve.SUSPECT
+        r = tier.assign(q)
+        assert tier.scheduler.hedges == 1
+        assert r.shards[0].hedged and not r.shards[0].missing
+        assert r.shards[0].replica in (0, 1)
+        # replicas share the shard's buffers: the hedge buys latency,
+        # never a different answer
+        np.testing.assert_array_equal(r.labels, full.labels)
+        np.testing.assert_array_equal(r.counts, full.counts)
+        np.testing.assert_array_equal(r.dist, full.dist)
+    finally:
+        tier.close()
+
+
+def test_retry_after_survives_tier_reraise():
+    """Satellite 1: the router's wrapping must preserve the session's
+    ``retry_after`` hint (and the error's type) — clients price their
+    retry on it."""
+    pts = synth.load("skewed2d", 400, seed=4)
+    sleeps = []
+    tier = serve.ShardedTier.build(pts, EPS, MINPTS, n_shards=2,
+                                   auto_recover=False, sleep=sleeps.append)
+    try:
+        chunk = np.asarray(tier.parts[0].snapshot.points)[:8]
+        with serve.faults.inject(
+                "serve.shard.ingest", times=-1, tag="shard-000",
+                error=serve.AdmissionError("downstream shed",
+                                           retry_after=7.5)):
+            with pytest.raises(serve.AdmissionError) as ei:
+                tier.ingest(chunk)
+        assert ei.value.retry_after == 7.5           # hint survives wrapping
+        assert "shard-000" in str(ei.value)
+        assert ei.value.details.get("session_id") == "shard-000"
+        # the leg's jittered backoff floored every delay at the hint
+        assert len(sleeps) == tier.leg_retries
+        assert all(s >= 7.5 for s in sleeps)
+        assert tier.health.state((0, 0)) == serve.DOWN   # strikes landed
+        # assign side: allow_partial off re-raises type + hint intact
+        tier.health = serve.HealthRegistry()
+        tier.allow_partial = False
+        q = _aimed_queries(tier, 1)
+        with serve.faults.inject(
+                "serve.shard.assign", times=-1, tag="shard-001",
+                error=serve.CapacityError("slab wedged", retry_after=2.25)):
+            with pytest.raises(serve.CapacityError) as ei2:
+                tier.assign(q)
+        assert ei2.value.retry_after == 2.25
+        assert ei2.value.details.get("session_id") == "shard-001"
+    finally:
+        tier.close()
+
+
+# --- partial gathers: the §16.3 restriction property ------------------------
+
+_PARTIAL = {}
+
+
+def _partial_setup():
+    if not _PARTIAL:
+        pts = synth.load("skewed2d", 600, seed=4)
+        snap = serve.build_snapshot(pts, EPS, MINPTS)
+        tier = serve.ShardedTier.from_snapshot(snap, n_shards=3,
+                                               auto_recover=False)
+        assert tier.n_shards == 3
+        q = np.concatenate(
+            [_domain_queries(pts, 60, seed=23)]
+            + [np.asarray(p.snapshot.points)[:5] for p in tier.parts])
+        _PARTIAL.update(tier=tier, snap=snap, q=q,
+                        full=serve.assign(snap, q))
+    return _PARTIAL["tier"], _PARTIAL["snap"], _PARTIAL["q"], \
+        _PARTIAL["full"]
+
+
+def _restricted_merge(tier, q, alive):
+    """Reference §16.3 restriction: the full merge minus the missing
+    shards' contributions, computed from per-shard single-snapshot
+    assigns + the same monotone remap/merge the router runs."""
+    mask = tier.map.window_shards(q)
+    nq = len(q)
+    counts = np.zeros(nq, np.int32)
+    merged = np.full(nq, np.iinfo(np.int64).max, np.int64)
+    dist = np.full(nq, np.inf, np.float32)
+    for j in alive:
+        idx = np.nonzero(mask[:, j])[0]
+        if idx.size == 0:
+            continue
+        r = serve.assign(tier.parts[j].snapshot, q[idx])
+        table = tier.parts[j].label_table.astype(np.int64)
+        if table.size:
+            glab = np.where(r.labels >= 0,
+                            table[np.clip(r.labels, 0, None)],
+                            np.iinfo(np.int64).max)
+        else:
+            glab = np.full(idx.size, np.iinfo(np.int64).max, np.int64)
+        merged[idx] = np.minimum(merged[idx], glab)
+        counts[idx] += r.counts
+        dist[idx] = np.minimum(dist[idx], r.dist)
+    labels = np.where(merged != np.iinfo(np.int64).max,
+                      merged, -1).astype(np.int32)
+    return labels, counts, dist
+
+
+def _check_partial_subset(bits):
+    tier, snap, q, full = _partial_setup()
+    K = tier.n_shards
+    alive = [j for j in range(K) if bits >> j & 1]
+    tier.health = serve.HealthRegistry()    # fresh: forget previous downs
+    for j in range(K):
+        if j not in alive:
+            tier.health.force_down((j, 0))
+    r = tier.assign(q)
+    ref_lab, ref_cnt, ref_dist = _restricted_merge(tier, q, alive)
+    # the partial answer IS the restriction — exactly, not approximately
+    np.testing.assert_array_equal(r.labels, ref_lab)
+    np.testing.assert_array_equal(r.counts, ref_cnt)
+    np.testing.assert_array_equal(r.dist, ref_dist)
+    # degradation direction: a missing shard only LOSES neighbors
+    assert (r.counts <= full.counts).all()
+    mism = r.labels != full.labels
+    assert ((r.labels[mism] == -1)
+            | (r.labels[mism].astype(np.int64)
+               > full.labels[mism])).all(), "partial merge invented a label"
+    routed = tier.map.window_shards(q)
+    missing_routed = any(routed[:, j].any()
+                         for j in range(K) if j not in alive)
+    assert r.partial == missing_routed
+    if missing_routed:
+        assert any(s.missing for s in r.shards.values())
+
+
+if _HYP:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 7))
+    def test_partial_merge_is_restriction(bits):
+        _check_partial_subset(bits)
+else:
+    @pytest.mark.parametrize("bits", list(range(8)))
+    def test_partial_merge_is_restriction(bits):
+        _check_partial_subset(bits)
+
+
+# --- kill matrix + chaos gate -----------------------------------------------
+
+@pytest.mark.parametrize("site", ["assign", "probe", "rematerialize",
+                                  "ingest"])
+def test_shard_kill_matrix(site, tmp_path):
+    """Kill shard 1 at each §16 site; recovery must converge back to
+    bit-identical parity with the unsharded path."""
+    pts = synth.load("skewed2d", 400, seed=4)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    tier = serve.ShardedTier.from_snapshot(
+        snap, n_shards=3, ckpt_root=str(tmp_path / "snap"),
+        wal_root=str(tmp_path / "wal"), durability="none",
+        auto_recover=False, max_delta_frac=np.inf,
+        health=serve.HealthRegistry(probe_deadline_s=30.0))
+    try:
+        tier.warmup(256)
+        j = 1
+        sid = serve.target_tag(j, None)
+        q = np.concatenate([_domain_queries(pts, 60, seed=31),
+                            np.asarray(tier.parts[j].snapshot.points)[:8]])
+        full = serve.assign(snap, q)
+        chunk = np.asarray(tier.parts[j].snapshot.points)[:16]
+        if site == "assign":
+            with serve.faults.inject("serve.shard.assign", times=1,
+                                     tag=sid, error=serve.faults.Kill("x")):
+                r = tier.assign(q)
+            assert r.partial and r.shards[j].missing
+            assert tier.health.state((j, 0)) == serve.DOWN
+        elif site == "probe":
+            with serve.faults.inject("serve.shard.probe", times=1,
+                                     tag=sid, error=serve.faults.Kill("x")):
+                assert tier.probe(j) is False
+            assert tier.health.state((j, 0)) == serve.DOWN
+        elif site == "rematerialize":
+            tier.health.force_down((j, 0))
+            with serve.faults.inject("serve.shard.rematerialize", times=1,
+                                     tag=sid, error=serve.faults.Kill("x")):
+                assert tier.recover_shard(j) is False
+            assert j in tier.quarantined     # still down: next attempt's job
+        elif site == "ingest":
+            with serve.faults.inject("serve.shard.ingest", times=1,
+                                     tag=sid, error=serve.faults.Kill("x")):
+                with pytest.raises(serve.AdmissionError) as ei:
+                    tier.ingest(chunk, request_id="kill-chunk")
+            assert ei.value.retry_after is not None
+            assert j in tier.quarantined
+            # a quarantined owner sheds follow-up writes pre-scatter
+            with pytest.raises(serve.AdmissionError):
+                tier.ingest(chunk, request_id="kill-chunk")
+        assert tier.recover_shard(j) is True      # re-materialize + certify
+        assert tier.quarantined == []
+        assert tier.health.state((j, 0)) == serve.HEALTHY
+        if site == "ingest":
+            # the unacked chunk retries idempotently after recovery
+            res = tier.ingest(chunk, request_id="kill-chunk")
+            assert not res.deduped
+            tier.compact(force=True)
+            ref = dbscan(np.concatenate([pts, chunk]), EPS, MINPTS,
+                         engine="grid")
+            lab, _ = _tier_global_labels(tier)
+            np.testing.assert_array_equal(lab, np.asarray(ref.labels))
+        else:
+            r2 = tier.assign(q)
+            assert not r2.partial
+            np.testing.assert_array_equal(r2.labels, full.labels)
+            np.testing.assert_array_equal(r2.counts, full.counts)
+            np.testing.assert_array_equal(r2.dist, full.dist)
+            ref = dbscan(pts, EPS, MINPTS, engine="grid")
+            lab, _ = _tier_global_labels(tier)
+            np.testing.assert_array_equal(lab, np.asarray(ref.labels))
+    finally:
+        tier.close()
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_chaos_gate_kill_replicas_one_by_one(k, tmp_path):
+    """ISSUE 10 acceptance gate: kill shard 0's serving copies one by
+    one — the tier keeps answering (failover, then flagged partials,
+    zero post-warmup recompiles), the quarantined shard re-materializes
+    from its checkpoint namespace, and post-recovery answers are
+    bit-identical to the single-snapshot path and batch ``dbscan()``."""
+    pts = synth.load("skewed2d", 500, seed=4)
+    snap = serve.build_snapshot(pts, EPS, MINPTS)
+    tier = serve.ShardedTier.from_snapshot(
+        snap, n_shards=k, ckpt_root=str(tmp_path / "snap"),
+        wal_root=str(tmp_path / "wal"), durability="none",
+        auto_recover=False,
+        health=serve.HealthRegistry(probe_deadline_s=30.0))
+    try:
+        tier.replicate(0, copies=1)
+        tier.warmup(256)
+        q = np.concatenate([_domain_queries(pts, 80, seed=19),
+                            np.asarray(tier.parts[0].snapshot.points)[:8]])
+        full = serve.assign(snap, q)
+        tier.scheduler.reset_stats()
+        # kill the primary: its replica inherits the slot, same bits
+        serve.faults.inject("serve.shard.assign", times=-1,
+                            tag="shard-000/r0", error=serve.faults.Kill("a"))
+        r = tier.assign(q)
+        assert not r.partial
+        np.testing.assert_array_equal(r.labels, full.labels)
+        assert tier.health.state((0, 0)) == serve.DOWN
+        # kill the replica too: the gather goes partial, flagged per-shard
+        serve.faults.inject("serve.shard.assign", times=-1,
+                            tag="shard-000/r1", error=serve.faults.Kill("b"))
+        r = tier.assign(q)
+        assert r.partial and r.degraded
+        assert r.shards[0].missing and r.shards[0].state == serve.DOWN
+        assert tier.quarantined == [0]
+        assert (r.counts <= full.counts).all()
+        mism = r.labels != full.labels
+        assert ((r.labels[mism] == -1)
+                | (r.labels[mism].astype(np.int64)
+                   > full.labels[mism])).all()
+        # the storm recompiled nothing: every surviving leg stayed on the
+        # warmed bucket ladder
+        assert tier.scheduler.recompiles == 0
+        assert tier.scheduler.partials >= 1
+        serve.faults.clear()
+        # re-materialize from the shard's own checkpoint namespace
+        assert tier.recover_shard(0) is True
+        assert tier.quarantined == []
+        r2 = tier.assign(q)
+        assert not r2.partial
+        np.testing.assert_array_equal(r2.labels, full.labels)
+        np.testing.assert_array_equal(r2.counts, full.counts)
+        np.testing.assert_array_equal(r2.dist, full.dist)
+        ref = dbscan(pts, EPS, MINPTS, engine="grid")
+        lab, core = _tier_global_labels(tier)
+        np.testing.assert_array_equal(lab, np.asarray(ref.labels))
+        np.testing.assert_array_equal(core, np.asarray(ref.core))
+        assert tier.scheduler.recompiles == 0
+    finally:
+        serve.faults.clear()
+        tier.close()
